@@ -1,0 +1,156 @@
+"""Shared benchmark harness: train MUX-PLMs through the paper's three
+stages on synthetic corpora, evaluate GLUE-proxy (sequence
+classification) and TOKEN-proxy (token classification), and measure
+inference throughput.
+
+The container is CPU-only, so absolute wall-clock is meaningless — but
+every paper claim is RELATIVE (mux-N vs vanilla on identical data/steps),
+which survives the hardware change.  Configs are scaled down (the paper's
+ratios, smaller dims); budgets are tuned so `python -m benchmarks.run`
+finishes on one CPU core.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MuxSpec
+from repro.data import (MarkovCorpus, ShardedLoader, classification_task,
+                        token_task)
+from repro.models.bert import MuxBERT, bert_config
+from repro.optim import AdamW, linear_warmup_linear_decay
+from repro.train import make_train_step, jit_step
+from repro.train.mux_stages import (retrieval_stage, mlm_stage,
+                                    electra_stage, classification_stage,
+                                    token_classification_stage)
+
+VOCAB = 256
+SEQ = 32
+
+
+def size_config(size: str = "small"):
+    dims = {
+        "tiny": dict(n_layers=2, d_model=64, n_heads=4, d_ff=128),
+        "small": dict(n_layers=4, d_model=96, n_heads=4, d_ff=192),
+        "base": dict(n_layers=6, d_model=128, n_heads=8, d_ff=256),
+    }[size]
+    return bert_config("small", vocab_size=VOCAB, max_seq_len=SEQ, **dims)
+
+
+@dataclass
+class Budget:
+    warmup: int = 150
+    pretrain: int = 300
+    finetune: int = 400
+    batch: int = 20          # divisible by every paper N (2, 5, 10)
+    lr: float = 3e-3
+    ft_lr: float = 1e-3      # gentler fine-tune LR preserves mux keys
+
+
+QUICK = Budget(warmup=100, pretrain=200, finetune=300)
+
+
+def _loader(sample_fn, batch, seed):
+    return ShardedLoader(sample_fn, batch, SEQ, seed=seed)
+
+
+def run_stage(params, loss_fn, loader, steps, lr, key, opt_extra=None):
+    opt = AdamW(lr=linear_warmup_linear_decay(lr, max(steps // 10, 5),
+                                              steps))
+    opt_state = opt.init(params)
+    step = jit_step(make_train_step(loss_fn, opt), donate=False)
+    m = {}
+    for i, batch in zip(range(steps), loader):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, m = step(params, opt_state, batch,
+                                    jax.random.fold_in(key, i))
+    return params, {k: float(v) for k, v in m.items()}
+
+
+def pretrain(cfg, mux: MuxSpec, budget: Budget, *, seed=0,
+             objective="mlm", skip_warmup=False, retrieval_rate=0.0):
+    """Stages 1+2.  objective: mlm | electra.  Returns params."""
+    key = jax.random.PRNGKey(seed)
+    params = MuxBERT.init(key, cfg, mux, electra=(objective == "electra"))
+    corpus = MarkovCorpus(vocab_size=VOCAB, seed=seed)
+    mk = lambda s: _loader(
+        lambda rng, b, l: {"tokens": corpus.sample(rng, b, l)},
+        budget.batch, s)
+    if mux.enabled and not skip_warmup:
+        params, m = run_stage(params, retrieval_stage(cfg, mux), mk(1),
+                              budget.warmup, budget.lr, key)
+    stage = (mlm_stage(cfg, mux, retrieval_rate=retrieval_rate)
+             if objective == "mlm" else electra_stage(cfg, mux))
+    params, m = run_stage(params, stage, mk(2), budget.pretrain,
+                          budget.lr, key)
+    return params, m
+
+
+def finetune_cls(params, cfg, mux: MuxSpec, budget: Budget, *, seed=0,
+                 n_classes=3):
+    key = jax.random.PRNGKey(seed + 100)
+    task = classification_task(VOCAB, n_classes, seed=0)
+    head = MuxBERT.init_classifier(key, cfg, n_classes)
+    ld = _loader(lambda rng, b, l: dict(
+        zip(("tokens", "labels"), task(rng, b, l))), budget.batch,
+        seed + 7)
+    ft = {"model": params, "head": head}
+    ft, m = run_stage(ft, classification_stage(cfg, mux), ld,
+                      budget.finetune, budget.ft_lr, key)
+    # eval on held-out batches
+    eval_ld = _loader(lambda rng, b, l: dict(
+        zip(("tokens", "labels"), task(rng, b, l))), 40, seed + 999)
+    accs = []
+    for i, batch in zip(range(5), eval_ld):
+        lg = MuxBERT.classify(ft["model"], ft["head"], cfg,
+                              jnp.asarray(batch["tokens"]), mux=mux)
+        accs.append(float((lg.argmax(-1) ==
+                           jnp.asarray(batch["labels"])).mean()))
+    return float(np.mean(accs))
+
+
+def finetune_token(params, cfg, mux: MuxSpec, budget: Budget, *, seed=0,
+                   n_tags=5):
+    key = jax.random.PRNGKey(seed + 200)
+    task = token_task(VOCAB, n_tags, seed=0)
+    head = MuxBERT.init_token_classifier(key, cfg, n_tags)
+    ld = _loader(lambda rng, b, l: dict(
+        zip(("tokens", "tags"), task(rng, b, l))), budget.batch, seed + 8)
+    ft = {"model": params, "head": head}
+    ft, m = run_stage(ft, token_classification_stage(cfg, mux), ld,
+                      budget.finetune, budget.ft_lr, key)
+    eval_ld = _loader(lambda rng, b, l: dict(
+        zip(("tokens", "tags"), task(rng, b, l))), 40, seed + 998)
+    accs = []
+    for i, batch in zip(range(5), eval_ld):
+        lg = MuxBERT.classify_tokens(ft["model"], ft["head"], cfg,
+                                     jnp.asarray(batch["tokens"]),
+                                     mux=mux)
+        accs.append(float((lg.argmax(-1) ==
+                           jnp.asarray(batch["tags"])).mean()))
+    return float(np.mean(accs))
+
+
+def measure_throughput(params, cfg, mux: MuxSpec, *, total_instances=40,
+                       trials=5):
+    """Instances/second of the jitted encoder forward.  Total instances
+    per call is FIXED; mux level N shrinks the backbone batch by N — the
+    paper's throughput mechanism (Table 1's ↗ column)."""
+    toks = jax.random.randint(jax.random.PRNGKey(0),
+                              (total_instances, SEQ), 4, VOCAB)
+
+    @jax.jit
+    def fwd(p, t):
+        return MuxBERT.mlm_logits(p, cfg, t, mux=mux)
+
+    fwd(params, toks).block_until_ready()
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fwd(params, toks).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return total_instances / float(np.median(times))

@@ -1,0 +1,33 @@
+"""Figure 4: accuracy–throughput Pareto frontier over (size × N)."""
+from __future__ import annotations
+
+from repro.core import MuxSpec
+from benchmarks.common import (QUICK, Budget, size_config, pretrain,
+                               finetune_cls, measure_throughput)
+
+
+def run(budget: Budget = QUICK, sizes=("tiny", "small"), ns=(1, 2, 5)):
+    pts = []
+    for size in sizes:
+        cfg = size_config(size)
+        for n in ns:
+            mux = MuxSpec(n=n)
+            params, _ = pretrain(cfg, mux, budget, seed=0)
+            acc = finetune_cls(params, cfg, mux, budget, seed=0)
+            tp = measure_throughput(params, cfg, mux)
+            pts.append({"size": size, "n": n, "acc": acc, "tp": tp})
+            print(f"fig4,{size},N={n},acc={acc:.3f},tp={tp:.1f}/s",
+                  flush=True)
+    # mark pareto-optimal points
+    for p in pts:
+        p["pareto"] = not any(q["acc"] > p["acc"] and q["tp"] > p["tp"]
+                              for q in pts)
+    front = [p for p in pts if p["pareto"]]
+    print("fig4,pareto_front=" + ";".join(
+        f"{p['size']}/N{p['n']}" for p in
+        sorted(front, key=lambda p: p["tp"])), flush=True)
+    return pts
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Benchmark runner: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick budgets
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale-ish
+    PYTHONPATH=src python -m benchmarks.run --only table1 fig5
+
+Each module prints CSV lines ("<table>,<fields>…"); the JSON blob of all
+rows is written to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks.common import QUICK, Budget
+    budget = Budget() if args.full else QUICK
+
+    from benchmarks import (table1_throughput, table3_sizes,
+                            table4_ensemble, table5_ablation,
+                            fig4_pareto, fig5_muxology,
+                            table6_seeds, table12_retrieval_aux)
+    # opt-in extras (appendix tables): --only table6 table12
+    extras = {
+        "table6": lambda: table6_seeds.run(budget),
+        "table12": lambda: table12_retrieval_aux.run(budget),
+    }
+    suites = {
+        "table1": lambda: table1_throughput.run(
+            budget, ns=(1, 2, 5, 10) if args.full else (1, 2, 5),
+            objectives=("mlm", "electra") if args.full else ("mlm",)),
+        "table3": lambda: table3_sizes.run(
+            budget, sizes=("tiny", "small", "base") if args.full
+            else ("tiny", "small")),
+        "table4": lambda: table4_ensemble.run(budget),
+        "table5": lambda: table5_ablation.run(budget),
+        "fig4": lambda: fig4_pareto.run(budget),
+        "fig5": lambda: fig5_muxology.run(budget),
+    }
+    if args.only:
+        suites = {k: v for k, v in {**suites, **extras}.items()
+                  if k in args.only}
+
+    results = {}
+    for name, fn in suites.items():
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        results[name] = fn()
+        print(f"=== {name} done in {time.time() - t0:.0f}s ===",
+              flush=True)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print("wrote results/benchmarks.json")
+
+
+if __name__ == "__main__":
+    main()

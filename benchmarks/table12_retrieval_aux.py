@@ -1,0 +1,25 @@
+"""Table 12: auxiliary retrieval objective during MLM pre-training at
+trade-off rates {0, 0.1, 0.5}.  Opt-in:
+`python -m benchmarks.run --only table12`."""
+from __future__ import annotations
+
+from repro.core import MuxSpec
+from benchmarks.common import QUICK, Budget, size_config, pretrain, \
+    finetune_cls
+
+
+def run(budget: Budget = QUICK, n=2, rates=(0.0, 0.1, 0.5)):
+    cfg = size_config("tiny")
+    rows = []
+    for rate in rates:
+        mux = MuxSpec(n=n)
+        params, _ = pretrain(cfg, mux, budget, seed=0,
+                             retrieval_rate=rate)
+        acc = finetune_cls(params, cfg, mux, budget, seed=0)
+        rows.append({"n": n, "retrieval_rate": rate, "glue_proxy": acc})
+        print(f"table12,N={n},rate={rate},cls={acc:.3f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Table 1: quality + throughput vs mux level N ∈ {1, 2, 5, 10}, for
+MUX-BERT and MUX-ELECTRA, plus the T-MUX baseline (no pre-training —
+random init fine-tuned directly, as in Murahari et al. 2022)."""
+from __future__ import annotations
+
+from repro.core import MuxSpec
+from benchmarks.common import (QUICK, Budget, size_config, pretrain,
+                               finetune_cls, finetune_token,
+                               measure_throughput)
+
+
+def run(budget: Budget = QUICK, ns=(1, 2, 5, 10), seeds=(0,),
+        objectives=("mlm", "electra"), with_tmux=True):
+    cfg = size_config("tiny")
+    rows = []
+    base_tp = None
+    for obj in objectives:
+        for n in ns:
+            mux = MuxSpec(n=n)
+            for seed in seeds:
+                params, _ = pretrain(cfg, mux, budget, seed=seed,
+                                     objective=obj)
+                cls = finetune_cls(params, cfg, mux, budget, seed=seed)
+                tok = finetune_token(params, cfg, mux, budget, seed=seed)
+                tp = measure_throughput(params, cfg, mux)
+                if base_tp is None and n == 1:
+                    base_tp = tp
+                rows.append({
+                    "model": f"mux-{'bert' if obj == 'mlm' else 'electra'}",
+                    "n": n, "seed": seed, "glue_proxy": cls,
+                    "token_proxy": tok, "inst_per_s": tp,
+                    "speedup": tp / base_tp if base_tp else 1.0,
+                })
+                print(f"table1,{rows[-1]['model']},N={n},seed={seed},"
+                      f"cls={cls:.3f},tok={tok:.3f},"
+                      f"speedup={rows[-1]['speedup']:.2f}x", flush=True)
+    if with_tmux:
+        for n in (2, 5):
+            mux = MuxSpec(n=n)
+            params, _ = pretrain(cfg, mux, Budget(
+                warmup=budget.warmup, pretrain=0,
+                finetune=budget.finetune, batch=budget.batch,
+                lr=budget.lr), seed=0, objective="mlm")
+            cls = finetune_cls(params, cfg, mux, budget, seed=0)
+            tok = finetune_token(params, cfg, mux, budget, seed=0)
+            rows.append({"model": "t-mux(no-pretrain)", "n": n,
+                         "seed": 0, "glue_proxy": cls,
+                         "token_proxy": tok, "inst_per_s": None,
+                         "speedup": None})
+            print(f"table1,t-mux,N={n},cls={cls:.3f},tok={tok:.3f}",
+                  flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Table 3: multiplexing across model sizes (N=2)."""
+from __future__ import annotations
+
+from repro.core import MuxSpec
+from benchmarks.common import (QUICK, Budget, size_config, pretrain,
+                               finetune_cls, finetune_token,
+                               measure_throughput)
+
+
+def run(budget: Budget = QUICK, sizes=("tiny", "small", "base"), n=2):
+    rows = []
+    for size in sizes:
+        cfg = size_config(size)
+        for mux_n in (1, n):
+            mux = MuxSpec(n=mux_n)
+            params, _ = pretrain(cfg, mux, budget, seed=0)
+            cls = finetune_cls(params, cfg, mux, budget, seed=0)
+            tok = finetune_token(params, cfg, mux, budget, seed=0)
+            tp = measure_throughput(params, cfg, mux)
+            rows.append({"size": size, "n": mux_n, "glue_proxy": cls,
+                         "token_proxy": tok, "inst_per_s": tp})
+            print(f"table3,{size},N={mux_n},cls={cls:.3f},tok={tok:.3f},"
+                  f"tp={tp:.1f}/s", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

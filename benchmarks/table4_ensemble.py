@@ -1,0 +1,63 @@
+"""Table 4: ensembling — feed the same instance N times (batch-permuted)
+and average the N demuxed logits; accuracy up, throughput down."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MuxSpec, make_ensemble_batch, ensemble_logits
+from repro.data import classification_task
+from repro.models.bert import MuxBERT
+from benchmarks.common import (QUICK, Budget, size_config, pretrain,
+                               finetune_cls)
+from repro.data import ShardedLoader
+from repro.train.mux_stages import classification_stage
+from benchmarks.common import run_stage, VOCAB, SEQ, _loader
+
+
+def run(budget: Budget = QUICK, ns=(2, 5)):
+    cfg = size_config("tiny")
+    rows = []
+    for n in ns:
+        mux = MuxSpec(n=n)
+        params, _ = pretrain(cfg, mux, budget, seed=0)
+        # fine-tune a classifier head
+        key = jax.random.PRNGKey(31)
+        task = classification_task(VOCAB, 3, seed=0)
+        head = MuxBERT.init_classifier(key, cfg, 3)
+        ld = _loader(lambda rng, b, l: dict(
+            zip(("tokens", "labels"), task(rng, b, l))),
+            budget.batch, 7)
+        ft = {"model": params, "head": head}
+        ft, _ = run_stage(ft, classification_stage(cfg, mux), ld,
+                          budget.finetune, budget.ft_lr, key)
+
+        # eval: normal (N distinct instances) vs ensembled (same instance
+        # duplicated N times, batch-permuted — Appendix D.1)
+        accs_plain, accs_ens = [], []
+        for i in range(6):
+            toks, labels = task(np.random.default_rng(1000 + i), 8, SEQ)
+            toks, labels = jnp.asarray(toks), jnp.asarray(labels)
+            pad = jnp.tile(toks, (n, 1))[:8 * n]      # fill mux slots
+            lg = MuxBERT.classify(ft["model"], ft["head"], cfg, pad,
+                                  mux=mux)[:8]
+            accs_plain.append(float((lg.argmax(-1) == labels).mean()))
+            batch, inv = make_ensemble_batch(
+                jax.random.PRNGKey(i), toks, n)
+            lg_all = MuxBERT.classify(ft["model"], ft["head"], cfg,
+                                      batch, mux=mux)
+            ens = ensemble_logits(lg_all, inv, n)
+            accs_ens.append(float((ens.argmax(-1) == labels).mean()))
+        row = {"n": n, "no_ens": float(np.mean(accs_plain)),
+               "ens": float(np.mean(accs_ens))}
+        row["delta"] = row["ens"] - row["no_ens"]
+        rows.append(row)
+        print(f"table4,N={n},no_ens={row['no_ens']:.3f},"
+              f"ens={row['ens']:.3f},delta={row['delta']:+.3f}",
+              flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table 6: lottery-ticket seed variance — the random seed controls the
+composition of the N multiplexed instances; the paper reports ≥1-point
+best-worst gaps.  Opt-in: `python -m benchmarks.run --only table6`."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MuxSpec
+from benchmarks.common import QUICK, Budget, size_config, pretrain, \
+    finetune_cls
+
+
+def run(budget: Budget = QUICK, ns=(2,), seeds=(0, 1, 2)):
+    cfg = size_config("tiny")
+    rows = []
+    for n in ns:
+        accs = []
+        for seed in seeds:
+            mux = MuxSpec(n=n)
+            params, _ = pretrain(cfg, mux, budget, seed=seed)
+            accs.append(finetune_cls(params, cfg, mux, budget, seed=seed))
+        row = {"n": n, "best": max(accs), "worst": min(accs),
+               "delta": max(accs) - min(accs), "accs": accs}
+        rows.append(row)
+        print(f"table6,N={n},best={row['best']:.3f},"
+              f"worst={row['worst']:.3f},delta={row['delta']:+.3f}",
+              flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fault-tolerance demo: inject a device failure mid-training and watch
+the supervisor restore the last checkpoint and finish the run; then
+restore the final checkpoint onto a *different* sharding (elastic).
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MuxSpec
+from repro.models.bert import MuxBERT, bert_config
+from repro.data import MarkovCorpus, ShardedLoader
+from repro.optim import AdamW
+from repro.train import make_train_step, jit_step
+from repro.train.mux_stages import mlm_stage
+from repro.checkpoint import AsyncCheckpointManager
+from repro.runtime import Supervisor, DeviceFailure, plan_elastic
+
+cfg = bert_config("small", n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                  vocab_size=256, max_seq_len=32)
+mux = MuxSpec(n=2)
+key = jax.random.PRNGKey(0)
+params = MuxBERT.init(key, cfg, mux)
+opt = AdamW(lr=1e-3)
+opt_state = opt.init(params)
+
+corpus = MarkovCorpus(vocab_size=256, seed=0)
+loader = ShardedLoader(lambda rng, b, l: {"tokens": corpus.sample(rng, b, l)},
+                       16, 32)
+step = jit_step(make_train_step(mlm_stage(cfg, mux), opt), donate=False)
+
+
+def step_fn(state, batch, i):
+    p, o = state
+    p, o, m = step(p, o, {k: jnp.asarray(v) for k, v in batch.items()},
+                   jax.random.fold_in(key, i))
+    return (p, o), m
+
+
+armed = {"on": True}
+
+
+def fault(step_i):
+    if step_i == 25 and armed["on"]:
+        armed["on"] = False
+        print(f"!!! injected device failure at step {step_i}")
+        raise DeviceFailure("slice 2 heartbeat lost")
+
+
+with tempfile.TemporaryDirectory() as d:
+    sup = Supervisor(step_fn=step_fn, ckpt=AsyncCheckpointManager(d),
+                     checkpoint_every=10, fault_hook=fault)
+    state, hist = sup.run((params, opt_state), iter(loader), 40)
+    restarts = [h for h in hist if h.get("event") == "restart"]
+    print(f"finished 40 steps with {len(restarts)} restart(s); "
+          f"restored from step {restarts[0]['at_step']}")
+
+    # elastic: plan a shrink from 512 -> 384 surviving devices
+    plan = plan_elastic(384, model_parallel=16, old_global_batch=256)
+    print(f"elastic plan after losing 128 devices: mesh={plan.mesh_shape}, "
+          f"batch {256} -> {plan.global_batch}, dropped={plan.dropped}")

@@ -1,0 +1,13 @@
+"""Serve a small model with batched multiplexed requests + load-adaptive
+ensembling (spare mux slots duplicate live requests, logits averaged).
+
+    PYTHONPATH=src python examples/serve_mux.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "gemma-2b", "--mux-n", "2",
+                            "--requests", "6", "--new-tokens", "6"]
+    raise SystemExit(main(argv))

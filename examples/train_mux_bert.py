@@ -1,0 +1,17 @@
+"""End-to-end driver: three-stage MUX-BERT training (retrieval warmup →
+multiplexed MLM pre-training → fine-tuning) with checkpointing and the
+fault-tolerant supervisor — the paper's Figure 1 pipeline.
+
+    PYTHONPATH=src python examples/train_mux_bert.py            # fast demo
+    PYTHONPATH=src python examples/train_mux_bert.py --steps 300
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--model", "mux-bert-small", "--mux-n", "2",
+                            "--warmup-steps", "60", "--steps", "120",
+                            "--batch", "16", "--seq", "32",
+                            "--vocab", "256"]
+    raise SystemExit(main(argv))

@@ -1,0 +1,2 @@
+"""repro — MUX-PLMs (data multiplexing) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

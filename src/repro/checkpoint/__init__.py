@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import (
+    save_checkpoint, restore_checkpoint, available_steps, prune,
+    AsyncCheckpointManager,
+)

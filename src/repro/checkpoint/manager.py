@@ -1,0 +1,152 @@
+"""Checkpointing: atomic sharded save / restore with elastic resharding.
+
+Layout per step::
+
+    <dir>/step_000123.tmp/        (written first)
+        tree.json                 paths, shapes, dtypes, metadata
+        <leaf-path-hash>.npy      one file per pytree leaf
+    <dir>/step_000123/            (atomic os.rename commit)
+
+Restore validates the tree structure, then ``jax.device_put``s every leaf
+with the CURRENT mesh's shardings — a checkpoint written on 512 chips
+restores onto 256 (or any other (data, model) split) without a conversion
+step: elastic resharding is the restore path, not a special case.
+
+``AsyncCheckpointManager`` snapshots to host (blocking only for the
+device->host copy) and writes in a background thread; ``wait()`` joins.
+keep_k pruning runs at every commit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _leaf_file(path: str) -> str:
+    h = hashlib.sha1(path.encode()).hexdigest()[:16]
+    return f"{h}.npy"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    from repro.runtime.sharding import path_of
+    return [(path_of(kp), v) for kp, v in flat], treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *, metadata=None,
+                    keep_k: int | None = None):
+    """Blocking atomic save of an arbitrary pytree of arrays."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat, _ = _flatten(tree)
+    index = {"step": step, "metadata": metadata or {}, "leaves": []}
+    for path, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = _leaf_file(path)
+        np.save(os.path.join(tmp, fname), arr)
+        index["leaves"].append({"path": path, "file": fname,
+                                "shape": list(arr.shape),
+                                "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "tree.json"), "w") as f:
+        json.dump(index, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    if keep_k:
+        prune(directory, keep_k)
+    return final
+
+
+def available_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            steps.append(int(d.split("_")[1]))
+    return sorted(steps)
+
+
+def prune(directory: str, keep_k: int):
+    steps = available_steps(directory)
+    for s in steps[:-keep_k]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"))
+
+
+def restore_checkpoint(directory: str, target_tree, *, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``target_tree``.
+
+    shardings: optional matching pytree of NamedSharding — leaves are
+    device_put with them (elastic resharding to the current mesh).
+    Returns (tree, step, metadata).
+    """
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "tree.json")) as f:
+        index = json.load(f)
+    by_path = {e["path"]: e for e in index["leaves"]}
+
+    flat, treedef = _flatten(target_tree)
+    sflat = (jax.tree.leaves(shardings) if shardings is not None
+             else [None] * len(flat))
+    out = []
+    for (path, leaf), sh in zip(flat, sflat):
+        if path not in by_path:
+            raise KeyError(f"checkpoint missing leaf {path!r}")
+        e = by_path[path]
+        if tuple(e["shape"]) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {path!r}: ckpt {e['shape']} vs "
+                f"target {list(leaf.shape)}")
+        arr = np.load(os.path.join(d, e["file"]))
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return treedef.unflatten(out), step, index["metadata"]
+
+
+class AsyncCheckpointManager:
+    """Snapshot-to-host then background write; at most one in flight."""
+
+    def __init__(self, directory: str, keep_k: int = 3):
+        self.directory = directory
+        self.keep_k = keep_k
+        self._thread: threading.Thread | None = None
+        self.last_committed: int | None = None
+
+    def save(self, step: int, tree, metadata=None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree,
+                            metadata=metadata, keep_k=self.keep_k)
+            self.last_committed = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, target_tree, *, step=None, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, target_tree, step=step,
+                                  shardings=shardings)

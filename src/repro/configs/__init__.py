@@ -1,0 +1,5 @@
+from repro.configs.registry import (
+    ARCHS, SHAPES, Shape, get_config, model_kind, cell_status, grid,
+)
+__all__ = ["ARCHS", "SHAPES", "Shape", "get_config", "model_kind",
+           "cell_status", "grid"]

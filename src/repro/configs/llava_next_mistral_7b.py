@@ -1,0 +1,22 @@
+"""llava-next-mistral-7b [vlm] — 32L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=32000 — anyres tiling; vision tower STUBBED (the
+assignment provides precomputed patch embeddings via input_specs).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab_size=32000, activation="silu", glu=True,
+    norm="rms", positions="rope", rope_theta=1_000_000.0, max_seq_len=32768,
+    tie_embeddings=False,
+    frontend="vision", frontend_len=576,   # base-resolution CLIP grid 24x24
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, max_seq_len=128, frontend_len=8, remat=False,
+)
+
+MODEL_KIND = "vlm"

@@ -1,0 +1,124 @@
+"""Architecture & shape registry — the dry-run grid's source of truth.
+
+``ARCHS``: the ten assigned architectures (exact public configs).
+``SHAPES``: the assigned input-shape set (same for every LM arch).
+``cell_status``: SUPPORTED / SKIP(reason) per (arch, shape) — skips follow
+DESIGN.md §6 (long_500k only for sub-quadratic archs; whisper 500k is out
+of family).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+_ARCH_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "gemma-7b": "gemma_7b",
+    "gemma-2b": "gemma_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "rwkv6-7b": "rwkv6_7b",
+    "whisper-small": "whisper_small",
+}
+ARCHS = tuple(_ARCH_MODULES)
+
+# paper models (the faithful-reproduction target) are selectable too
+_PAPER_MODELS = ("mux-bert-small", "mux-bert-base", "mux-bert-large",
+                 "mux-electra-base")
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+# config overrides for perf experiments (dryrun --set …); applied on top
+# of the registered config by get_config
+_OVERRIDES: dict = {}
+
+# CI mode: every get_config returns the REDUCED variant (dryrun --reduced
+# exercises the full lowering path on a laptop-scale fake mesh)
+_REDUCED_MODE = False
+
+
+def set_reduced_mode(on: bool):
+    global _REDUCED_MODE
+    _REDUCED_MODE = on
+
+
+def set_overrides(arch: str, **kw):
+    _OVERRIDES[arch] = {**_OVERRIDES.get(arch, {}), **kw}
+
+
+def clear_overrides():
+    _OVERRIDES.clear()
+
+
+def _apply_overrides(arch: str, cfg):
+    kw = dict(_OVERRIDES.get(arch, {}))
+    if not kw:
+        return cfg
+    moe_kw = {k[4:]: v for k, v in kw.items() if k.startswith("moe_")}
+    kw = {k: v for k, v in kw.items() if not k.startswith("moe_")}
+    if moe_kw and cfg.moe is not None:
+        import dataclasses
+        kw["moe"] = dataclasses.replace(cfg.moe, **moe_kw)
+    return cfg.replace(**kw)
+
+
+def get_config(arch: str, *, reduced: bool = False):
+    reduced = reduced or _REDUCED_MODE
+    if arch in _PAPER_MODELS:
+        from repro.models.bert import bert_config
+        size = arch.split("-")[-1]
+        cfg = bert_config(size if size in ("small", "base", "large") else "base")
+        if reduced:
+            cfg = cfg.replace(n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                              vocab_size=512, max_seq_len=64)
+        return _apply_overrides(arch, cfg)
+    m = _module(arch)
+    return _apply_overrides(arch, m.REDUCED if reduced else m.CONFIG)
+
+
+def model_kind(arch: str) -> str:
+    if arch in _PAPER_MODELS:
+        return "bert"
+    return _module(arch).MODEL_KIND
+
+
+def cell_status(arch: str, shape_name: str) -> str:
+    """'ok' or 'skip:<reason>'."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if shape.name == "long_500k":
+        if arch == "whisper-small":
+            return ("skip: whisper sources cap at 1500 frames / 448 decode "
+                    "positions; 500k is out of family")
+        if not cfg.sub_quadratic:
+            return ("skip: pure full-attention arch — 500k dense KV cache "
+                    "is out of memory/latency budget; sub-quadratic archs "
+                    "only (DESIGN.md §6)")
+    return "ok"
+
+
+def grid():
+    """All 40 (arch, shape) cells with status."""
+    return [(a, s, cell_status(a, s)) for a in ARCHS for s in SHAPES]

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: data multiplexing as a composable
+JAX module (MUX / contextual MUX / RSA & prefix DeMUX / MuxEngine /
+three-stage training losses / ensembling)."""
+from repro.core.spec import MuxSpec
+from repro.core.mux import GaussianMux, ContextualMux, init_mux, apply_mux
+from repro.core.demux import RSADemux, PrefixDemux, init_demux, apply_demux
+from repro.core.engine import (
+    MuxEngine, retrieval_loss, retrieval_accuracy,
+    make_ensemble_batch, ensemble_logits,
+)
+
+__all__ = [
+    "MuxSpec", "GaussianMux", "ContextualMux", "init_mux", "apply_mux",
+    "RSADemux", "PrefixDemux", "init_demux", "apply_demux",
+    "MuxEngine", "retrieval_loss", "retrieval_accuracy",
+    "make_ensemble_batch", "ensemble_logits",
+]

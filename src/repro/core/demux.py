@@ -1,0 +1,100 @@
+"""Demultiplexer modules (Eq. 3 prefix baseline; Eq. 6 RSA keys).
+
+Output convention: (N, B, L, D) — one recovered stream per instance.
+
+The RSA demux MLP([h ; k_i]) is computed in split form:
+
+    W1 @ [h ; k_i] = W1h @ h + W1k @ k_i
+
+so the h-projection (the expensive matmul) runs ONCE and is shared across
+the N instances; the per-instance part is a precomputed (N, Dh) bias.  The
+Pallas kernel ``kernels/demux_rsa.py`` fuses the whole
+``gelu(hW1h + kW1k + b1) @ W2`` per instance without materializing the
+(N, B, L, Dh) intermediate in HBM; this module is the reference/jnp path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Linear, LayerNorm, normal_init
+
+
+class RSADemux:
+    """h^i = LN(MLP([h_mux ; k^i])), learned private keys k^i (Eq. 6)."""
+
+    @staticmethod
+    def init(key, n: int, d: int, d_hidden: int):
+        ks = jax.random.split(key, 4)
+        return {
+            "k": normal_init(ks[0], (n, d), stddev=1.0),
+            "w1h": Linear.init(ks[1], d, d_hidden, use_bias=True),
+            "w1k": Linear.init(ks[2], d, d_hidden, use_bias=False),
+            "w2": Linear.init(ks[3], d_hidden, d, use_bias=True),
+            "ln": LayerNorm.init(None, d),
+        }
+
+    @staticmethod
+    def apply(p, h, *, use_kernel: bool = False):   # h: (B, L, D)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            out = kops.demux_rsa(
+                h, p["k"].astype(h.dtype),
+                p["w1h"]["w"].astype(h.dtype), p["w1k"]["w"].astype(h.dtype),
+                p["w1h"]["b"].astype(h.dtype),
+                p["w2"]["w"].astype(h.dtype), p["w2"]["b"].astype(h.dtype))
+        else:
+            shared = Linear.apply(p["w1h"], h)              # (B, L, Dh), once
+            kb = p["k"].astype(h.dtype) @ p["w1k"]["w"].astype(h.dtype)  # (N, Dh)
+            z = jax.nn.gelu(shared[None] + kb[:, None, None, :])
+            out = Linear.apply(p["w2"], z)                  # (N, B, L, D)
+        return LayerNorm.apply(p["ln"], out)
+
+
+class PrefixDemux:
+    """T-MUX baseline (Eq. 3): N prefix positions carry instance signatures.
+
+    The model wrapper prepends N prefix token embeddings before the
+    backbone; ``split`` recovers (prefix_out, body_out);
+    ``apply`` computes h^i_j = MLP([h_j ; p^i]) with p^i = prefix_out[:, i].
+    """
+
+    @staticmethod
+    def init(key, n: int, d: int, d_hidden: int):
+        ks = jax.random.split(key, 4)
+        return {
+            "prefix_emb": normal_init(ks[0], (n, d), stddev=0.02),
+            "w1h": Linear.init(ks[1], d, d_hidden, use_bias=True),
+            "w1p": Linear.init(ks[2], d, d_hidden, use_bias=False),
+            "w2": Linear.init(ks[3], d_hidden, d, use_bias=True),
+            "ln": LayerNorm.init(None, d),
+        }
+
+    @staticmethod
+    def prefix(p, b: int, dtype):
+        """(B, N, D) prefix embeddings to prepend to the mux'd stream."""
+        return jnp.broadcast_to(p["prefix_emb"].astype(dtype)[None],
+                                (b, *p["prefix_emb"].shape))
+
+    @staticmethod
+    def apply(p, h_with_prefix, n: int):            # (B, N+L, D)
+        pfx = h_with_prefix[:, :n]                  # (B, N, D) -> p^i
+        h = h_with_prefix[:, n:]                    # (B, L, D)
+        shared = Linear.apply(p["w1h"], h)          # (B, L, Dh)
+        pb = Linear.apply(p["w1p"], pfx)            # (B, N, Dh)
+        z = jax.nn.gelu(shared[None] + pb.transpose(1, 0, 2)[:, :, None, :])
+        out = Linear.apply(p["w2"], z)              # (N, B, L, D)
+        return LayerNorm.apply(p["ln"], out)
+
+
+def init_demux(key, spec, d: int):
+    dh = spec.demux_hidden or 2 * d
+    if spec.demux_kind == "rsa":
+        return RSADemux.init(key, spec.n, d, dh)
+    return PrefixDemux.init(key, spec.n, d, dh)
+
+
+def apply_demux(p, spec, h, *, use_kernel: bool = False):
+    if spec.demux_kind == "rsa":
+        return RSADemux.apply(p, h, use_kernel=use_kernel)
+    return PrefixDemux.apply(p, h, spec.n)

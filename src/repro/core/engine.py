@@ -1,0 +1,113 @@
+"""MuxEngine — attaches data multiplexing to any backbone.
+
+The engine operates at the representation level, between the embedding
+layer and the backbone, which is what makes it applicable to every
+architecture family in the zoo (dense/MoE/SSM/hybrid/enc-dec/VLM):
+
+    (N*B, L, D) embeds --group--> (N, B, L, D) --MUX--> (B, L, D)
+        backbone runs on B/N of the original batch (the throughput win)
+    (B, L, D) hidden --DeMUX--> (N, B, L, D) --ungroup--> (N*B, L, D)
+
+For causal LMs the mixture is safe: mux combines *across instances at the
+same position*, never across positions, so autoregressive masking is
+preserved per-instance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import MuxSpec
+from repro.core.mux import init_mux, apply_mux
+from repro.core.demux import init_demux, apply_demux, PrefixDemux
+
+
+class MuxEngine:
+    @staticmethod
+    def init(key, spec: MuxSpec, d: int):
+        spec.validate()
+        if not spec.enabled:
+            return {}
+        k0, k1 = jax.random.split(key)
+        return {"mux": init_mux(k0, spec, d),
+                "demux": init_demux(k1, spec, d)}
+
+    # -- pre-backbone ------------------------------------------------------
+    @staticmethod
+    def combine(p, spec: MuxSpec, x):
+        """x: (N*B, L, D) -> mux'd (B, L, D) [+ prefix for the baseline]."""
+        if not spec.enabled:
+            return x
+        nb, l, d = x.shape
+        if nb % spec.n:
+            raise ValueError(f"batch {nb} not divisible by mux N={spec.n}")
+        xg = x.reshape(spec.n, nb // spec.n, l, d)
+        xm = apply_mux(p["mux"], spec, xg)
+        if spec.demux_kind == "prefix":
+            pfx = PrefixDemux.prefix(p["demux"], xm.shape[0], xm.dtype)
+            xm = jnp.concatenate([pfx, xm], axis=1)   # (B, N+L, D)
+        return xm
+
+    # -- post-backbone -----------------------------------------------------
+    @staticmethod
+    def separate(p, spec: MuxSpec, h, *, use_kernel: bool = False):
+        """h: (B', L', D) -> demuxed (N*B, L, D)."""
+        if not spec.enabled:
+            return h
+        hs = apply_demux(p["demux"], spec, h, use_kernel=use_kernel)
+        n, b, l, d = hs.shape
+        return hs.reshape(n * b, l, d)
+
+    @staticmethod
+    def extra_positions(spec: MuxSpec) -> int:
+        """Sequence-length overhead inside the backbone (prefix baseline)."""
+        return spec.n if (spec.enabled and spec.demux_kind == "prefix") else 0
+
+    @staticmethod
+    def frozen_paths(spec: MuxSpec):
+        """Param paths the optimizer must not update (fixed Gaussian keys)."""
+        if spec.enabled and not spec.learn_keys_v:
+            return (("mux_engine", "mux", "v"),)
+        return ()
+
+
+def retrieval_loss(demuxed_logits, token_ids, *, valid_mask=None):
+    """Token-retrieval warmup (stage 1): auto-encode all N*L tokens.
+
+    demuxed_logits: (N*B, L, V); token_ids: (N*B, L).
+    """
+    logp = jax.nn.log_softmax(demuxed_logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, token_ids[..., None], axis=-1)[..., 0]
+    if valid_mask is not None:
+        nll = nll * valid_mask
+        return nll.sum() / jnp.maximum(valid_mask.sum(), 1)
+    return nll.mean()
+
+
+def retrieval_accuracy(demuxed_logits, token_ids, *, valid_mask=None):
+    pred = demuxed_logits.argmax(axis=-1)
+    hit = (pred == token_ids).astype(jnp.float32)
+    if valid_mask is not None:
+        return (hit * valid_mask).sum() / jnp.maximum(valid_mask.sum(), 1)
+    return hit.mean()
+
+
+def make_ensemble_batch(key, x, n: int):
+    """Duplicate one batch N times with a random permutation (Sec. 5.4).
+
+    x: (B, ...) -> (N*B, ...) permuted; returns (batch, inverse_perm) so the
+    N logits of each original instance can be gathered back and averaged.
+    """
+    b = x.shape[0]
+    rep = jnp.tile(x, (n,) + (1,) * (x.ndim - 1))       # (N*B, ...)
+    perm = jax.random.permutation(key, n * b)
+    inv = jnp.argsort(perm)
+    return rep[perm], inv
+
+
+def ensemble_logits(logits, inv_perm, n: int):
+    """Undo the permutation and average the N predictions per instance."""
+    nb = logits.shape[0]
+    b = nb // n
+    unperm = logits[inv_perm]                            # (N*B, ...)
+    return unperm.reshape(n, b, *logits.shape[1:]).mean(axis=0)

@@ -1,0 +1,94 @@
+"""Multiplexer modules (Eq. 1-2 and Eq. 4-5 of the paper).
+
+Input convention: ``x`` of shape (N, B, L, D) — N instances already grouped
+(the model wrapper reshapes a global batch (N*B, L, D) into this).  Output:
+one superimposed stream (B, L, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Linear, LayerNorm, normal_init
+from repro.nn.attention import attention_core
+
+
+class GaussianMux:
+    """x_mux = (1/N) sum_i x^i ⊙ v^i,  v^i ~ N(0, I) fixed (Eq. 1-2)."""
+
+    @staticmethod
+    def init(key, n: int, d: int):
+        return {"v": normal_init(key, (n, d), stddev=1.0)}
+
+    @staticmethod
+    def apply(p, x):                       # x: (N, B, L, D)
+        v = p["v"].astype(x.dtype)
+        return jnp.einsum("nbld,nd->bld", x, v) / x.shape[0]
+
+
+def _mini_encoder_layer_init(key, d: int, n_heads: int):
+    """One pre-LN transformer encoder layer used inside ContextualMux."""
+    ks = jax.random.split(key, 6)
+    dh = d // n_heads
+    return {
+        "ln1": LayerNorm.init(None, d),
+        "wqkv": Linear.init(ks[0], d, (3, n_heads, dh), use_bias=False),
+        "wo": Linear.init(ks[1], n_heads * dh, d, use_bias=False),
+        "ln2": LayerNorm.init(None, d),
+        "w1": Linear.init(ks[2], d, 4 * d),
+        "w2": Linear.init(ks[3], 4 * d, d),
+    }
+
+
+def _mini_encoder_layer_apply(p, x, n_heads: int):
+    """x: (B, L, D) bidirectional self-attention + MLP, pre-LN residual."""
+    h = LayerNorm.apply(p["ln1"], x)
+    qkv = Linear.apply(p["wqkv"], h)               # (B, L, 3, H, Dh)
+    q, k, v = qkv[..., 0, :, :], qkv[..., 1, :, :], qkv[..., 2, :, :]
+    o = attention_core(q, k, v, mask=None)
+    x = x + Linear.apply(p["wo"], o.reshape(*o.shape[:2], -1))
+    h = LayerNorm.apply(p["ln2"], x)
+    x = x + Linear.apply(p["w2"], jax.nn.gelu(Linear.apply(p["w1"], h)))
+    return x
+
+
+class ContextualMux:
+    """Attention-based multiplexer (Eq. 4-5).
+
+    TRANS_ctx contextualizes each instance along L; after the Hadamard
+    with v^i, TRANS_inst attends *across the N instances* at every
+    position; the result is averaged over N.
+    """
+
+    @staticmethod
+    def init(key, n: int, d: int, *, n_heads: int = 8):
+        k0, k1, k2 = jax.random.split(key, 3)
+        return {
+            "v": normal_init(k0, (n, d), stddev=1.0),
+            "trans_ctx": _mini_encoder_layer_init(k1, d, n_heads),
+            "trans_inst": _mini_encoder_layer_init(k2, d, n_heads),
+        }
+
+    @staticmethod
+    def apply(p, x, *, n_heads: int = 8):          # x: (N, B, L, D)
+        n, b, l, d = x.shape
+        h = _mini_encoder_layer_apply(p["trans_ctx"], x.reshape(n * b, l, d),
+                                      n_heads)
+        h = h.reshape(n, b, l, d)
+        g = h * p["v"].astype(x.dtype)[:, None, None, :]       # Eq. 4
+        # attend across instances at each position: sequences of length N
+        g = g.transpose(1, 2, 0, 3).reshape(b * l, n, d)
+        g = _mini_encoder_layer_apply(p["trans_inst"], g, n_heads)  # Eq. 5
+        return g.mean(axis=1).reshape(b, l, d)
+
+
+def init_mux(key, spec, d: int):
+    if spec.mux_kind == "gaussian":
+        return GaussianMux.init(key, spec.n, d)
+    return ContextualMux.init(key, spec.n, d, n_heads=spec.ctx_heads)
+
+
+def apply_mux(p, spec, x):
+    if spec.mux_kind == "gaussian":
+        return GaussianMux.apply(p, x)
+    return ContextualMux.apply(p, x, n_heads=spec.ctx_heads)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    MarkovCorpus, mlm_mask, electra_corrupt, classification_task,
+    token_task, PAD_ID, CLS_ID, SEP_ID, MASK_ID, N_SPECIAL,
+)
+from repro.data.loader import ShardedLoader
+__all__ = ["MarkovCorpus", "mlm_mask", "electra_corrupt",
+           "classification_task", "token_task", "ShardedLoader",
+           "PAD_ID", "CLS_ID", "SEP_ID", "MASK_ID", "N_SPECIAL"]

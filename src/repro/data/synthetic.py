@@ -1,0 +1,115 @@
+"""Synthetic corpora (offline container — no Wikipedia/Books).
+
+The paper's claims are *relative* (mux vs. vanilla on identical data), so
+we validate them on controlled synthetic language:
+
+  * ``MarkovCorpus`` — order-1 Markov chains with Zipf-distributed
+    stationary marginals: enough structure for an MLM to beat the unigram
+    entropy floor, so pre-training has signal.
+  * ``classification_task`` — C Markov chains; the label is the
+    generating chain: solvable from content, not trivial.
+  * ``token_task`` — tag_t = (tok_t + tok_{t-1}) % n_tags: needs context,
+    mirrors POS/NER shape.
+
+All generation is jax.random-based and seed-deterministic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# reserved token ids
+PAD_ID, CLS_ID, SEP_ID, MASK_ID = 0, 1, 2, 3
+N_SPECIAL = 4
+
+
+def zipf_probs(vocab: int, alpha: float = 1.2):
+    r = np.arange(1, vocab + 1, dtype=np.float64)
+    p = r ** -alpha
+    return p / p.sum()
+
+
+@dataclass
+class MarkovCorpus:
+    vocab_size: int = 512
+    alpha: float = 1.2
+    branching: int = 8          # out-degree per state (low-entropy rows)
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.vocab_size - N_SPECIAL
+        base = zipf_probs(v, self.alpha)
+        # each token transitions to `branching` preferred successors
+        succ = rng.integers(0, v, size=(v, self.branching))
+        w = rng.dirichlet(np.ones(self.branching) * 0.5, size=v)
+        rows = np.full((v, v), 1e-8)
+        np.put_along_axis(rows, succ, w * 0.9, axis=1)
+        rows += base[None, :] * 0.1
+        rows /= rows.sum(1, keepdims=True)
+        self._cum = np.cumsum(rows, axis=1)       # (v, v) CDF per state
+        self._init_cum = np.cumsum(base)
+
+    def sample(self, rng: np.random.Generator, batch: int, length: int):
+        """(B, L) int32 token ids in [N_SPECIAL, vocab)."""
+        v = self.vocab_size - N_SPECIAL
+        out = np.empty((batch, length), np.int64)
+        u = rng.random((batch, length))
+        out[:, 0] = np.searchsorted(self._init_cum, u[:, 0])
+        for t in range(1, length):
+            rows = self._cum[out[:, t - 1]]
+            out[:, t] = (u[:, t, None] < rows).argmax(1)
+        return (out + N_SPECIAL).astype(np.int32)
+
+
+def mlm_mask(key, tokens, *, vocab: int, rate: float = 0.15):
+    """BERT 80/10/10 masking.  Returns (inputs, labels, weights)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    is_target = jax.random.bernoulli(k1, rate, tokens.shape)
+    r = jax.random.uniform(k2, tokens.shape)
+    rand_tok = jax.random.randint(k3, tokens.shape, N_SPECIAL, vocab)
+    inputs = jnp.where(is_target & (r < 0.8), MASK_ID,
+                       jnp.where(is_target & (r < 0.9), rand_tok, tokens))
+    weights = is_target.astype(jnp.float32)
+    return inputs, tokens, weights
+
+
+def electra_corrupt(key, tokens, *, vocab: int, rate: float = 0.15):
+    """Uniform-random replacement (the paper's MUX-ELECTRA generator).
+    Returns (inputs, is_replaced)."""
+    k1, k2 = jax.random.split(key)
+    is_target = jax.random.bernoulli(k1, rate, tokens.shape)
+    rand_tok = jax.random.randint(k2, tokens.shape, N_SPECIAL, vocab)
+    # a "replacement" equal to the original counts as not-replaced
+    inputs = jnp.where(is_target, rand_tok, tokens)
+    is_replaced = (inputs != tokens).astype(jnp.float32)
+    return inputs, is_replaced
+
+
+def classification_task(vocab: int, n_classes: int, seed: int = 0):
+    """C Markov corpora; label = which chain generated the sequence."""
+    corpora = [MarkovCorpus(vocab, seed=seed * 100 + c, branching=4 + 2 * c)
+               for c in range(n_classes)]
+
+    def sample(rng: np.random.Generator, batch: int, length: int):
+        labels = rng.integers(0, n_classes, batch)
+        seqs = np.stack([corpora[labels[i]].sample(rng, 1, length - 1)[0]
+                         for i in range(batch)])
+        cls = np.full((batch, 1), CLS_ID, np.int32)
+        return np.concatenate([cls, seqs], 1), labels.astype(np.int32)
+    return sample
+
+
+def token_task(vocab: int, n_tags: int, seed: int = 0):
+    """Token-level tags requiring 1 token of left context."""
+    corpus = MarkovCorpus(vocab, seed=seed)
+
+    def sample(rng: np.random.Generator, batch: int, length: int):
+        toks = corpus.sample(rng, batch, length)
+        prev = np.concatenate([toks[:, :1], toks[:, :-1]], 1)
+        tags = ((toks + prev) % n_tags).astype(np.int32)
+        return toks, tags
+    return sample

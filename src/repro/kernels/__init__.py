@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a pure-jnp oracle in
+ref.py, and a jit'd wrapper in ops.py.  Validated in interpret mode on
+CPU; compiled by Mosaic on TPU.
+"""

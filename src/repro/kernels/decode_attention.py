@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: flash-decode — single-query attention against a
+long KV cache, split over cache blocks with a logsumexp-combined
+reduction.
+
+Decode attention is memory-bound (one query reads the whole cache), so
+the kernel's job is to stream K/V blocks through VMEM exactly once at
+full HBM bandwidth; the online-softmax state (m, l, acc) lives in
+scratch across the (sequential) cache-block grid axis.  Ring-buffer
+validity and causality are handled with an explicit per-slot position
+vector (same convention as ``models.blocks.init_kv_cache``).
+
+On a 'model'-sharded cache-length axis, per-shard partial (acc, m, l)
+combine with a tiny psum — GSPMD inserts it around the kernel; this is
+the TPU analogue of flash-decode's split-K reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk: int, nk: int, q_pos: int, window, causal: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, dh) grouped queries
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                               # (bk,) slot positions
+    dh = q.shape[-1]
+
+    s = jnp.dot(q * dh ** -0.5, k.T)               # (G, bk)
+    mask = pos >= 0
+    if causal:
+        mask &= pos <= q_pos
+    if window is not None:
+        mask &= pos > q_pos - window
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(
+            l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_pos", "window", "causal",
+                                             "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, slot_pos, *, q_pos: int,
+                     window=None, causal: bool = True, block_k: int = 256,
+                     interpret: bool = False):
+    """q: (B, 1, H, Dh); k_cache/v_cache: (B, C, Hkv, Dh);
+    slot_pos: (C,) int32 absolute position per cache slot (-1 = empty).
+    Returns (B, 1, H, Dh)."""
+    b, _, h, dh = q.shape
+    c, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    bk = min(block_k, c)
+    c_p = pl.cdiv(c, bk) * bk
+    if c_p != c:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, c_p - c), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, c_p - c), (0, 0), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, (0, c_p - c), constant_values=-1)
+    nk = c_p // bk
+
+    qt = q.reshape(b, hkv, g, dh)                  # group queries per kv head
+    kt = k_cache.transpose(0, 2, 1, 3)             # (B, Hkv, C, dh)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk=bk, nk=nk, q_pos=q_pos,
+                          window=window, causal=causal),
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b_, h_, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, bk), lambda b_, h_, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, slot_pos[None])
+    return out.reshape(b, 1, h, dh)

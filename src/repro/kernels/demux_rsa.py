@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused RSA demultiplexer MLP.
+
+    out[n] = gelu(h @ W1h + k[n] @ W1k + b1) @ W2 + b2      (Eq. 6, split)
+
+The naive path materializes the (N, T, F) GELU intermediate in HBM
+(F = 2D typically) — at N=10 that is the demux's dominant memory traffic.
+This kernel keeps the (bt, bf) intermediate in VMEM and accumulates the
+second matmul over F tiles, so HBM sees only h (once per N — streamed),
+the weights, and the (N, T, D) output.  The per-instance term k[n] @ W1k
+is a (N, F) matrix precomputed outside (negligible).
+
+Grid: (N, T/bt, F/bf); F is the innermost (sequential on TPU) axis so the
+output tile accumulates in place across F steps.  MXU-aligned tiles
+(bt, bf multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_full(h_ref, w1h_ref, kb_ref, w2_ref, b2_ref, o_ref):
+    # h_ref: (bt, D); w1h_ref: (D, bf); kb_ref: (1, bf) [b1 folded in];
+    # w2_ref: (bf, D); b2_ref: (1, D); o_ref: (1, bt, D) accumulated
+    # across the (sequential, innermost) F grid axis.
+    f = pl.program_id(2)
+    z = jnp.dot(h_ref[...].astype(jnp.float32),
+                w1h_ref[...].astype(jnp.float32))
+    z = jax.nn.gelu(z + kb_ref[0].astype(jnp.float32))
+    part = jnp.dot(z, w2_ref[...].astype(jnp.float32))
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[0] = (part + b2_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
+
+    @pl.when(f > 0)
+    def _acc():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f",
+                                             "interpret"))
+def demux_rsa(h, k, w1h, w1k, b1, w2, b2, *, block_t: int = 256,
+              block_f: int = 512, interpret: bool = False):
+    """h: (T, D); k: (N, D); w1h: (D, F); w1k: (D, F); b1: (F,);
+    w2: (F, D); b2: (D,) -> (N, T, D)."""
+    t, d = h.shape
+    n = k.shape[0]
+    f = w1h.shape[1]
+    bt = min(block_t, t)
+    bf = min(block_f, f)
+    kb = (k @ w1k + b1[None]).astype(h.dtype)            # (N, F) tiny
+    # zero-pad the F axis so partial tiles contribute exactly zero
+    # (padded W2 rows are zero; padded kb/W1h columns only feed those rows)
+    f_p = pl.cdiv(f, bf) * bf
+    if f_p != f:
+        w1h = jnp.pad(w1h, ((0, 0), (0, f_p - f)))
+        w2 = jnp.pad(w2, ((0, f_p - f), (0, 0)))
+        kb = jnp.pad(kb, ((0, 0), (0, f_p - f)))
+    grid = (n, pl.cdiv(t, bt), pl.cdiv(f_p, bf))
+    return pl.pallas_call(
+        _kernel_full,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i, j, l: (j, 0)),     # h rows
+            pl.BlockSpec((d, bf), lambda i, j, l: (0, l)),     # W1h F-tile
+            pl.BlockSpec((1, bf), lambda i, j, l: (i, l)),     # k@W1k+b1
+            pl.BlockSpec((bf, d), lambda i, j, l: (l, 0)),     # W2 F-tile
+            pl.BlockSpec((1, d), lambda i, j, l: (0, 0)),      # b2
+        ],
+        out_specs=pl.BlockSpec((1, bt, d), lambda i, j, l: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t, d), h.dtype),
+        interpret=interpret,
+    )(h, w1h, kb, w2, b2[None])

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused multiplex combine  out = mean_i x_i ⊙ v_i.
+
+A naive ``(x * v[:, None]).mean(0)`` reads x from HBM once per fused op
+but materializes the (N, T, D) product if XLA fails to fuse across the
+mean; this kernel makes the blocking explicit: each (bt, bd) VMEM tile
+accumulates the N-term reduction in registers with a single pass over x.
+Tiles are aligned to the VPU lane width (bd multiple of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, v_ref, o_ref, *, n: int):
+    # x_ref: (N, bt, bd); v_ref: (N, bd); o_ref: (bt, bd)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for i in range(n):                       # unrolled over N (2..10)
+        acc += x_ref[i].astype(jnp.float32) * v_ref[i].astype(jnp.float32)
+    o_ref[...] = (acc / n).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d",
+                                             "interpret"))
+def mux_combine(x, v, *, block_t: int = 256, block_d: int = 512,
+                interpret: bool = False):
+    """x: (N, T, D); v: (N, D) -> (T, D)."""
+    n, t, d = x.shape
+    bt = min(block_t, t)
+    bd = min(block_d, d)
+    grid = (pl.cdiv(t, bt), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bt, bd), lambda i, j: (0, i, j)),
+            pl.BlockSpec((n, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(x, v)

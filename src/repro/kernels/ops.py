@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (the kernel body
+runs in Python via the Pallas interpreter — bitwise the same program the
+Mosaic compiler would lower for TPU); on a TPU runtime ``interpret=False``
+compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import mux_combine as _mux
+from repro.kernels import demux_rsa as _demux
+from repro.kernels import flash_attention as _flash
+from repro.kernels import rwkv6 as _rwkv
+from repro.kernels import decode_attention as _dec
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mux_combine(x, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _mux.mux_combine(x, v, **kw)
+
+
+def demux_rsa(h, k, w1h, w1k, b1, w2, b2, **kw):
+    """Batched wrapper: h may be (B, L, D) or (T, D)."""
+    kw.setdefault("interpret", _interpret())
+    if h.ndim == 3:
+        b, l, d = h.shape
+        out = _demux.demux_rsa(h.reshape(b * l, d), k, w1h, w1k, b1, w2,
+                               b2, **kw)
+        return out.reshape(out.shape[0], b, l, d)
+    return _demux.demux_rsa(h, k, w1h, w1k, b1, w2, b2, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash.flash_attention(q, k, v, **kw)
+
+
+def rwkv6_chunked(r, k, v, logw, u, s0, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _rwkv.rwkv6_chunked(r, k, v, logw, u, s0, **kw)
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _dec.decode_attention(q, k_cache, v_cache, slot_pos, **kw)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept by tests/test_kernels_*)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mux_combine_ref(x, v):
+    """x: (N, T, D); v: (N, D) -> (T, D) = mean_i x_i * v_i."""
+    return jnp.einsum("ntd,nd->td", x, v) / x.shape[0]
+
+
+def demux_rsa_ref(h, k, w1h, w1k, b1, w2, b2):
+    """h: (T, D); k: (N, D); w1h: (D, F); w1k: (D, F); b1: (F,);
+    w2: (F, D); b2: (D,) -> (N, T, D) = gelu(hW1h + kW1k + b1) W2 + b2."""
+    shared = h @ w1h                       # (T, F)
+    kb = k @ w1k + b1[None]                # (N, F)
+    z = jax.nn.gelu(shared[None] + kb[:, None])
+    return z @ w2 + b2
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0,
+                        logit_softcap=None):
+    """q: (B, Lq, H, Dh); k,v: (B, Lk, Hkv, Dh) — naive oracle."""
+    from repro.nn.attention import attention_core, make_attention_mask
+    lq, lk = q.shape[1], k.shape[1]
+    mask = None
+    if causal or window is not None:
+        mask = make_attention_mask(q_offset + jnp.arange(lq),
+                                   jnp.arange(lk), causal=causal,
+                                   window=window)[None]
+    return attention_core(q, k, v, mask=mask, logit_softcap=logit_softcap)
+
+
+def rwkv6_ref(r, k, v, logw, u, s0):
+    """Sequential per-token recurrence (the definitionally-correct form).
+    r,k,v,logw: (B, L, H, D); u: (H, D); s0: (B, H, D, D)."""
+    w = jnp.exp(logw)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s) + \
+            jnp.einsum("bhk,bhk->bh", rt * u[None], kt)[..., None] * vt
+        s = wt[..., None] * s + kt[..., None] * vt[:, :, None, :]
+        return s, out
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    sT, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), sT
+
+
+def decode_attention_ref(q, k_cache, v_cache, slot_pos, *, q_pos,
+                         window=None, causal=True):
+    """Oracle: naive attention over the cache with slot-position masks."""
+    from repro.nn.attention import attention_core, make_attention_mask
+    mask = make_attention_mask(jnp.asarray([q_pos]), slot_pos,
+                               causal=causal, window=window,
+                               kv_valid=slot_pos >= 0)[None]
+    return attention_core(q, k_cache, v_cache, mask=mask)

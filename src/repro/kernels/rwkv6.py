@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: chunkwise RWKV6 (Finch) recurrence.
+
+One program per (B·H); the chunk axis is the innermost (sequential) grid
+dimension, so the (hd, hd) matrix state lives in VMEM scratch across
+chunks — the TPU analogue of the CUDA chunked scan in
+flash-linear-attention, re-thought for the sequential-grid + VMEM
+hierarchy (no warp shuffles needed: the state never leaves VMEM between
+chunks, and intra-chunk work is two MXU matmuls plus a (c, c, hd)
+decay-weighted score contraction).
+
+Inputs per (b, h): r, k, v, logw (L, hd); u (hd,); s0 (hd, hd).
+Outputs: out (L, hd), sT (hd, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sT_ref,
+            s_ref, *, nc: int, c: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (c, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, hd) -> (hd,)
+    s = s_ref[...]
+
+    la = jnp.cumsum(lw, axis=0)               # (c, hd) log decay incl. t
+    la_prev = la - lw
+    r_in = r * jnp.exp(la_prev)
+    out = jnp.dot(r_in, s)                    # inter-chunk
+
+    # intra-chunk: strict-lower-triangular decay-weighted scores
+    decay = jnp.exp(la_prev[:, None, :] - la[None, :, :])   # (c, c, hd)
+    att = jnp.einsum("tk,jk,tjk->tj", r, k, decay)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = jnp.where(tri, att, 0.0)
+    bonus = jnp.sum(r * u * k, axis=-1)       # (c,)
+    out = out + jnp.dot(att, v) + bonus[:, None] * v
+
+    # carry state
+    la_end = la[-1:]
+    k_scaled = k * jnp.exp(la_end - la)
+    s_ref[...] = jnp.exp(la_end[0])[:, None] * s + jnp.dot(k_scaled.T, v)
+
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sT_ref[0] = s_ref[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(r, k, v, logw, u, s0, *, chunk: int = 64,
+                  interpret: bool = False):
+    """r,k,v,logw: (B, L, H, hd); u: (H, hd); s0: (B, H, hd, hd)
+    -> out (B, L, H, hd), sT (B, H, hd, hd)."""
+    b, l, h, hd = r.shape
+    c = min(chunk, l)
+    assert l % c == 0, f"L={l} not divisible by chunk={c}"
+    nc = l // c
+
+    def bh(x):                                 # (B, L, H, hd) -> (BH, L, hd)
+        return x.transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+
+    rt, kt, vt, lwt = map(bh, (r, k, v, logw))
+    ut = jnp.broadcast_to(u[None], (b, h, hd)).reshape(b * h, hd)
+    s0t = s0.reshape(b * h, hd, hd)
+
+    out, sT = pl.pallas_call(
+        functools.partial(_kernel, nc=nc, c=c),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, hd), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, l, hd), r.dtype),
+            jax.ShapeDtypeStruct((b * h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, lwt, ut, s0t)
+
+    out = out.reshape(b, h, l, hd).transpose(0, 2, 1, 3)
+    return out, sT.reshape(b, h, hd, hd)

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — jax locks the device count on
+first backend init, and only dryrun.py is allowed to request the 512
+placeholder host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+    an outer data-parallel dimension crossing the DCN/ICI boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip constants used by §Roofline
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link (~per-device effective)
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,96 @@
+"""§Roofline report: read dry-run jsonl records and emit the per-cell
+three-term table + bottleneck + useful-FLOPs ratio + what-would-move-it.
+
+Usage:
+    python -m repro.launch.roofline results/dryrun_baseline.jsonl \
+        [--md results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+_SUGGEST = {
+    "compute": ("compute-bound — already near the good regime; next savings"
+                " come from cutting remat recompute or casting more matmuls"
+                " to bf16"),
+    "memory": ("memory-bound — cut HBM traffic: bigger fusion regions, "
+               "bf16 activations end-to-end, lower optimizer-state traffic "
+               "(ZeRO over data), or larger per-step arithmetic intensity "
+               "(bigger microbatch per device)"),
+    "collective": ("collective-bound — change the sharding so the dominant"
+                   " all-reduce/all-gather disappears: locality-aware MoE "
+                   "dispatch, batch-sharded attention for non-divisible "
+                   "heads, or overlap via async collectives"),
+}
+
+
+def load(path: str):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def row(r: dict) -> dict | None:
+    if not r["status"].startswith("ok"):
+        return None
+    rl = r["roofline"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "mux_n": r.get("mux_n", 1),
+        "compute_ms": rl["compute_s"] * 1e3,
+        "memory_ms": rl["memory_s"] * 1e3,
+        "collective_ms": rl["collective_s"] * 1e3,
+        "bottleneck": rl["bottleneck"],
+        "model_flops": r.get("model_flops"),
+        "useful_ratio": r.get("useful_flops_ratio"),
+        "peak_gb": (r["memory"].get("peak_bytes") or 0) / 1e9,
+        "suggest": _SUGGEST[rl["bottleneck"]],
+    }
+
+
+def format_md(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | N | compute | memory | collective | "
+        "bound | useful FLOPs | peak/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        d = row(r)
+        if d is None:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - |"
+                f" - | {r['status'][:60]} | - | - |")
+            continue
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['mux_n']} "
+            f"| {d['compute_ms']:.1f}ms | {d['memory_ms']:.1f}ms "
+            f"| {d['collective_ms']:.1f}ms | **{d['bottleneck']}** "
+            f"| {100 * (d['useful_ratio'] or 0):.0f}% "
+            f"| {d['peak_gb']:.2f}GB |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsonl")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+    md = format_md(recs)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+    # summary of bottlenecks
+    from collections import Counter
+    c = Counter(r["roofline"]["bottleneck"] for r in recs
+                if r["status"].startswith("ok"))
+    print("\nbottleneck census:", dict(c))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Dry-run builders: ShapeDtypeStruct input specs, abstract model/opt
+state, and the train/prefill/decode functions to lower — shared by
+dryrun.py, roofline.py and the launch drivers.
+
+Everything here is allocation-free: params and optimizer state come from
+``jax.eval_shape`` over the real init functions, inputs are
+ShapeDtypeStructs, and shardings are computed from shapes alone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import MuxSpec
+from repro.configs import SHAPES, get_config, model_kind
+from repro.models import TransformerLM, EncDecLM, VLM
+from repro.models.vlm import D_VISION
+from repro.optim import AdamW, linear_warmup_cosine_decay
+from repro.runtime import sharding as shard
+from repro.train.losses import chunked_vocab_xent, causal_lm_loss
+
+
+def f32(*s):
+    return jax.ShapeDtypeStruct(s, jnp.float32)
+
+
+def i32(*s):
+    return jax.ShapeDtypeStruct(s, jnp.int32)
+
+
+def model_class(kind: str):
+    return {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str, *, mux_n: int = 1):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    kind = model_kind(arch)
+    sh = SHAPES[shape_name]
+    gb, L = sh.global_batch, sh.seq_len
+    if gb % max(mux_n, 1):
+        raise ValueError(f"batch {gb} not divisible by mux N={mux_n}")
+
+    if sh.kind == "decode":
+        return {"tokens": i32(gb, 1)}
+    if kind == "vlm":
+        p = cfg.frontend_len
+        return {"tokens": i32(gb, L - p),
+                "patches": f32(gb, p, D_VISION)}
+    if kind == "encdec":
+        enc = cfg.encoder
+        return {"tokens": i32(gb, L),
+                "frames": f32(gb, enc.frontend_len, enc.d_model)}
+    return {"tokens": i32(gb, L)}
+
+
+def batch_shardings_for(specs, mesh):
+    """Shard batch dim over DP axes when divisible, else replicate."""
+    dp = shard.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(x):
+        if x.shape and x.shape[0] % dp_size == 0 and dp_size > 1:
+            return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, specs)
+
+
+# ---------------------------------------------------------------------------
+# abstract state
+# ---------------------------------------------------------------------------
+
+def abstract_params(arch: str, mux: MuxSpec, seed: int = 0):
+    cfg = get_config(arch)
+    cls = model_class(model_kind(arch))
+    key = jax.random.PRNGKey(seed)
+    return jax.eval_shape(lambda k: cls.init(k, cfg, mux), key)
+
+
+def make_optimizer(total_steps: int = 100_000):
+    return AdamW(lr=linear_warmup_cosine_decay(3e-4, 2000, total_steps))
+
+
+def abstract_opt_state(params_struct, optimizer):
+    return jax.eval_shape(optimizer.init, params_struct)
+
+
+def abstract_cache(arch: str, shape_name: str, mux: MuxSpec,
+                   dtype=jnp.bfloat16):
+    cfg = get_config(arch)
+    cls = model_class(model_kind(arch))
+    sh = SHAPES[shape_name]
+    b = sh.global_batch // max(mux.n, 1)
+    return jax.eval_shape(
+        lambda: cls.init_cache(cfg, b, sh.seq_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# functions to lower
+# ---------------------------------------------------------------------------
+
+def _lm_loss(cfg, params, hidden, tokens, aux, *, vocab_chunk: int):
+    """Causal-LM loss from backbone hidden states (tied or untied head),
+    chunked over the vocab when it is large (big-vocab memory lever)."""
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"] if "embed" in params else \
+            params["backbone"]["embed"]["table"]
+    else:
+        w = params["lm_head"]["w"] if "lm_head" in params else \
+            params["backbone"]["lm_head"]["w"]
+        table = w.T
+    lg_h = hidden[:, :-1]
+    labels = tokens[:, 1:]
+    if cfg.vocab_size >= 65536 or vocab_chunk > 0:
+        chunk = vocab_chunk or 512
+        loss = chunked_vocab_xent(lg_h, table, labels, chunk=chunk)
+    else:
+        logits = lg_h @ table.astype(lg_h.dtype).T
+        loss = causal_lm_loss(
+            jnp.pad(logits, ((0, 0), (0, 1), (0, 0))), tokens)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss
+
+
+def build_train_step(arch: str, *, mux: MuxSpec = MuxSpec(),
+                     optimizer=None, dtype=jnp.bfloat16,
+                     vocab_chunk: int = 0, use_kernels: bool = False,
+                     mesh=None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  `mesh` enables in-graph sharding
+    constraints (attn_seq_shard) during lowering."""
+    cfg = get_config(arch)
+    kind = model_kind(arch)
+    optimizer = optimizer or make_optimizer()
+    ectx = {"mesh": mesh} if mesh is not None else None
+
+    def loss_fn(params, batch):
+        if kind == "vlm":
+            # text positions only (patches occupy the first P slots)
+            out = VLM.apply(params, cfg, batch["tokens"], batch["patches"],
+                            mux=mux, dtype=dtype, use_kernels=use_kernels,
+                            extra_ctx=ectx)
+            p = cfg.frontend_len
+            loss = causal_lm_loss(out["logits"][:, p:], batch["tokens"])
+            if cfg.moe is not None:
+                loss = loss + cfg.moe.router_aux_weight * out["aux"]
+            return loss
+        if kind == "encdec":
+            out = EncDecLM.apply(params, cfg, batch["tokens"],
+                                 batch["frames"], mux=mux, dtype=dtype,
+                                 extra_ctx=ectx)
+            return causal_lm_loss(out["logits"], batch["tokens"])
+        out = TransformerLM.apply(params, cfg, batch["tokens"], mux=mux,
+                                  dtype=dtype, logits_out=False,
+                                  use_kernels=use_kernels, extra_ctx=ectx)
+        return _lm_loss(cfg, params, out["hidden"], batch["tokens"],
+                        out["aux"], vocab_chunk=vocab_chunk)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state, om = optimizer.update(grads, opt_state, params)
+        params = optimizer.apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def build_prefill(arch: str, *, mux: MuxSpec = MuxSpec(),
+                  dtype=jnp.bfloat16, use_kernels: bool = False,
+                  mesh=None):
+    cfg = get_config(arch)
+    kind = model_kind(arch)
+    ectx = {"mesh": mesh} if mesh is not None else None
+
+    def prefill_step(params, cache, batch):
+        kw = dict(mux=mux, cache=cache, dtype=dtype)
+        if kind == "vlm":
+            out = VLM.apply(params, cfg, batch["tokens"], batch["patches"],
+                            extra_ctx=ectx, **kw)
+        elif kind == "encdec":
+            out = EncDecLM.apply(params, cfg, batch["tokens"],
+                                 batch["frames"], extra_ctx=ectx, **kw)
+        else:
+            out = TransformerLM.apply(params, cfg, batch["tokens"], **kw,
+                                      use_kernels=use_kernels,
+                                      extra_ctx=ectx)
+        return out["logits"][:, -1], out["cache"]
+
+    return prefill_step
+
+
+def build_decode_step(arch: str, *, mux: MuxSpec = MuxSpec(),
+                      dtype=jnp.bfloat16, seq_len: int = 0, mesh=None):
+    cfg = get_config(arch)
+    kind = model_kind(arch)
+    q_offset = max(seq_len - 1, 0)
+    ectx = {"mesh": mesh} if mesh is not None else None
+
+    def decode(params, cache, batch):
+        kw = dict(mux=mux, cache=cache, q_offset=q_offset, dtype=dtype,
+                  extra_ctx=ectx)
+        if kind == "encdec":
+            out = EncDecLM.apply(params, cfg, batch["tokens"], **kw)
+        elif kind == "vlm":
+            out = VLM.apply(params, cfg, batch["tokens"], **kw)
+        else:
+            out = TransformerLM.apply(params, cfg, batch["tokens"], **kw)
+        return out["logits"], out["cache"]
+
+    return decode

@@ -1,0 +1,9 @@
+"""Model zoo: unified transformer backbone + family wrappers."""
+from repro.models.config import ModelConfig, MoEConfig, param_count, active_param_count
+from repro.models.transformer import TransformerLM
+from repro.models.encdec import EncDecLM
+from repro.models.vlm import VLM
+from repro.models.bert import MuxBERT, bert_config
+
+__all__ = ["ModelConfig", "MoEConfig", "param_count", "active_param_count",
+           "TransformerLM", "EncDecLM", "VLM", "MuxBERT", "bert_config"]

@@ -1,0 +1,109 @@
+"""MUX-BERT / MUX-ELECTRA — the paper's faithful reproduction target.
+
+Bidirectional encoder (post-hoc: we use pre-LN for stability; noted in
+DESIGN.md), learned positions, GELU MLPs, tied MLM head with transform
+layer.  ELECTRA shares the backbone and adds a per-position binary
+replaced-token-detection head (the paper uses a *uniform-random generator*
+instead of a small MLM generator — we do the same).
+
+Heads:
+  * MLM head (pre-train + token-retrieval warmup)
+  * RTD head (ELECTRA pre-train)
+  * sequence classification ([CLS]) and token classification (fine-tune)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MuxSpec
+from repro.nn import Linear, LayerNorm, Embedding, zeros_init
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+
+def bert_config(size: str = "base", **kw) -> ModelConfig:
+    dims = {
+        "small": dict(n_layers=4, d_model=512, n_heads=8, d_ff=2048),
+        "base": dict(n_layers=12, d_model=768, n_heads=12, d_ff=3072),
+        "large": dict(n_layers=24, d_model=1024, n_heads=16, d_ff=4096),
+    }[size]
+    base = dict(
+        name=f"mux-bert-{size}", family="encoder", vocab_size=30522,
+        activation="gelu_tanh", glu=False, qkv_bias=True, norm="ln",
+        positions="learned", max_seq_len=512, causal=False,
+        tie_embeddings=True, remat=False)
+    base.update(dims)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class MuxBERT:
+    @staticmethod
+    def init(key, cfg: ModelConfig, mux: MuxSpec = MuxSpec(),
+             *, electra: bool = False):
+        ks = jax.random.split(key, 6)
+        d = cfg.d_model
+        params = {"backbone": TransformerLM.init(ks[0], cfg, mux)}
+        # MLM head: transform -> LN -> tied-embedding logits + bias
+        params["mlm"] = {
+            "transform": Linear.init(ks[1], d, d),
+            "ln": LayerNorm.init(None, d),
+            "bias": zeros_init(None, (cfg.vocab_size,)),
+        }
+        if electra:
+            params["rtd"] = {
+                "dense": Linear.init(ks[2], d, d),
+                "out": Linear.init(ks[3], d, 1),
+            }
+        return params
+
+    @staticmethod
+    def hidden(params, cfg, tokens, *, mux=MuxSpec(), dtype=jnp.float32,
+               use_kernels=False):
+        out = TransformerLM.apply(
+            params["backbone"], cfg, tokens, mux=mux, dtype=dtype,
+            logits_out=False, use_kernels=use_kernels)
+        return out["hidden"]
+
+    @staticmethod
+    def mlm_logits(params, cfg, tokens, *, mux=MuxSpec(),
+                   dtype=jnp.float32, use_kernels=False):
+        h = MuxBERT.hidden(params, cfg, tokens, mux=mux, dtype=dtype,
+                           use_kernels=use_kernels)
+        t = jax.nn.gelu(Linear.apply(params["mlm"]["transform"], h))
+        t = LayerNorm.apply(params["mlm"]["ln"], t)
+        logits = Embedding.attend(params["backbone"]["embed"], t)
+        return logits + params["mlm"]["bias"].astype(logits.dtype)
+
+    @staticmethod
+    def rtd_logits(params, cfg, tokens, *, mux=MuxSpec(),
+                   dtype=jnp.float32):
+        """ELECTRA replaced-token-detection: (NB, L) binary logits."""
+        h = MuxBERT.hidden(params, cfg, tokens, mux=mux, dtype=dtype)
+        t = jax.nn.gelu(Linear.apply(params["rtd"]["dense"], h))
+        return Linear.apply(params["rtd"]["out"], t)[..., 0]
+
+    # --- fine-tuning heads -------------------------------------------------
+    @staticmethod
+    def init_classifier(key, cfg, n_classes: int):
+        k0, k1 = jax.random.split(key)
+        return {"pool": Linear.init(k0, cfg.d_model, cfg.d_model),
+                "out": Linear.init(k1, cfg.d_model, n_classes)}
+
+    @staticmethod
+    def classify(params, head, cfg, tokens, *, mux=MuxSpec(),
+                 dtype=jnp.float32):
+        h = MuxBERT.hidden(params, cfg, tokens, mux=mux, dtype=dtype)
+        cls = jnp.tanh(Linear.apply(head["pool"], h[:, 0]))
+        return Linear.apply(head["out"], cls)
+
+    @staticmethod
+    def init_token_classifier(key, cfg, n_tags: int):
+        return {"out": Linear.init(key, cfg.d_model, n_tags)}
+
+    @staticmethod
+    def classify_tokens(params, head, cfg, tokens, *, mux=MuxSpec(),
+                        dtype=jnp.float32):
+        h = MuxBERT.hidden(params, cfg, tokens, mux=mux, dtype=dtype)
+        return Linear.apply(head["out"], h)

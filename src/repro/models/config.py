@@ -1,0 +1,180 @@
+"""ModelConfig — one dataclass that spans the whole zoo.
+
+Families are expressed through ``block_pattern`` (the repeating layer
+pattern, scanned over periods) plus family-specific fields; the same
+backbone code serves dense / MoE / SSM / hybrid / encoder-only models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    n_shared: int = 0             # always-on shared experts (qwen2-moe)
+    d_shared: int = 0             # shared-expert hidden dim (0 -> d_expert)
+    router_aux_weight: float = 0.01
+    capacity_factor: float = 1.25
+    # dispatch: 'global_sort' (baseline, one sort over all tokens) or
+    # 'local_group' (per-row dispatch; sort/cumsum stay on the data shard,
+    # EP traffic becomes two activation all-to-alls — §Perf iteration)
+    impl: str = "global_sort"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense|moe|hybrid|ssm|vlm|audio|encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int
+    n_kv_heads: int = 0           # 0 -> n_heads (MHA)
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    activation: str = "silu"      # FFN activation (gate act when glu)
+    glu: bool = True              # gated FFN (SwiGLU / GeGLU)
+    qkv_bias: bool = False
+    norm: str = "rms"             # rms|ln
+    positions: str = "rope"       # rope|learned|none
+    rope_theta: float = 10000.0
+    max_seq_len: int = 8192
+    window: int | None = None     # sliding-window attention (all attn blocks)
+    logit_softcap: float | None = None
+    embedding_scale: bool = False # gemma: embeds *= sqrt(d_model)
+    tie_embeddings: bool = True
+    causal: bool = True
+    dropout: float = 0.0
+    # layer pattern: one period, cycled over n_layers.  entries:
+    #   'attn' (global), 'local' (windowed attn), 'rglru', 'rwkv'
+    block_pattern: tuple = ("attn",)
+    local_window: int = 2048
+    moe: MoEConfig | None = None
+    # rwkv6
+    rwkv_heads: int = 0           # 0 -> d_model // 64
+    rwkv_chunk: int = 32          # chunkwise-scan chunk length
+    rwkv_intra_dtype: str = "f32" # 'bf16' halves decay-tensor traffic
+    # attention core: shard queries along L on 'model' when the head axes
+    # don't divide the mesh (GQA/MQA pathology — §Perf iteration)
+    attn_seq_shard: bool = False
+    # frontends (stubbed per assignment): input_specs provides embeddings
+    frontend: str | None = None   # vision|audio
+    frontend_len: int = 0         # patches/frames produced by the stub
+    # encoder (whisper): set for enc-dec models
+    encoder: "ModelConfig | None" = None
+    # training-time behaviour
+    remat: bool = True            # checkpoint each scanned period
+    attn_impl: str = "auto"       # auto|naive|chunked|flash
+    attn_chunk: int = 1024
+
+    def __post_init__(self):
+        if self.n_kv_heads == 0:
+            object.__setattr__(self, "n_kv_heads", self.n_heads)
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def pattern_layers(self):
+        """Full per-layer block types, pattern cycled to n_layers."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def tail_blocks(self):
+        """Leftover layers that don't fill a full period (unrolled)."""
+        k = self.n_layers - self.n_periods * len(self.block_pattern)
+        return self.block_pattern[:k]
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if per-token decode cost & state are O(1) or O(window)."""
+        return all(b != "attn" for b in self.block_pattern) or (
+            self.window is not None)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (embeddings included once if tied)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    n = v * d  # embedding
+    if not cfg.tie_embeddings:
+        n += v * d
+    if cfg.positions == "learned":
+        n += cfg.max_seq_len * d
+    for blk in cfg.pattern_layers:
+        n += _block_params(cfg, blk)
+    n += d * (2 if cfg.norm == "ln" else 1)  # final norm
+    if cfg.encoder is not None:
+        n += param_count(cfg.encoder)
+    return n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    m = cfg.moe
+    full = param_count(cfg)
+    ff_mult = 3 if cfg.glu else 2
+    per_expert = ff_mult * cfg.d_model * m.d_expert
+    inactive = (m.n_experts - m.top_k) * per_expert * cfg.n_layers
+    return full - inactive
+
+
+def _ffn_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    if cfg.moe is not None:
+        m = cfg.moe
+        ff = 3 if cfg.glu else 2
+        n = m.n_experts * ff * d * m.d_expert + d * m.n_experts  # + router
+        if m.n_shared:
+            n += ff * d * (m.d_shared or m.d_expert) * m.n_shared
+        return n
+    return (3 if cfg.glu else 2) * d * cfg.d_ff
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.head_dim
+    n = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd   # qkv
+    n += cfg.n_heads * hd * d                                 # o
+    if cfg.qkv_bias:
+        n += (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    return n
+
+
+def _block_params(cfg: ModelConfig, blk: str) -> int:
+    """Matches blocks.init_* exactly (tested in test_models)."""
+    d = cfg.d_model
+    n = 2 * d * (2 if cfg.norm == "ln" else 1)   # two norms (LN has bias)
+    if blk in ("attn", "local"):
+        n += _attn_params(cfg) + _ffn_params(cfg)
+    elif blk == "xattn":
+        n += d * (2 if cfg.norm == "ln" else 1)  # third norm
+        n += 2 * _attn_params(cfg) + _ffn_params(cfg)
+    elif blk == "rglru":
+        w = d
+        n += 2 * d * w + w * d                   # w_in, w_gate, w_out
+        n += 4 * w + w                           # conv taps + bias
+        n += 2 * (w * w + w) + w                 # w_a, w_i, lam
+        n += _ffn_params(cfg)
+    elif blk == "rwkv":
+        lora = 64
+        n += 4 * d                               # mu (tm lerp)
+        n += 4 * d * d                           # w_r, w_k, w_v, w_g
+        n += d + d * lora + lora * d             # decay w0 + LoRA
+        n += d + 2 * d                           # u + groupnorm
+        n += d * d                               # w_o
+        n += d                                   # mu_cm
+        n += 2 * d * cfg.d_ff                    # cm_k, cm_v
+    return n

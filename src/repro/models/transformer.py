@@ -1,0 +1,187 @@
+"""TransformerLM — the unified backbone for every assigned architecture.
+
+Layers are grouped into *periods* (one repetition of ``cfg.block_pattern``)
+and scanned with ``lax.scan`` over stacked period params — one period of
+HLO regardless of depth (38-layer recurrentgemma lowers the same code as
+12-layer whisper), which keeps dry-run compiles tractable and is the
+standard production trick.  Leftover layers (pattern not dividing
+n_layers) are unrolled as ``tail``.
+
+Data multiplexing (the paper's technique) is integrated between embedding
+and backbone via ``MuxEngine``; with ``mux.n == 1`` the engine is a no-op
+and this is a vanilla LM.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MuxSpec, MuxEngine
+from repro.nn import Embedding, LayerNorm, RMSNorm, Linear, normal_init
+from repro.nn.rope import rope_frequencies
+from repro.models.config import ModelConfig
+from repro.models.blocks import (
+    init_block, apply_block, init_block_cache)
+
+
+def _stack_init(key, n: int, init_fn):
+    ps = [init_fn(k) for k in jax.random.split(key, max(n, 1))[:n]]
+    if not ps:
+        return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+class TransformerLM:
+    # ------------------------------------------------------------------ init
+    @staticmethod
+    def init(key, cfg: ModelConfig, mux: MuxSpec = MuxSpec()):
+        ks = jax.random.split(key, 8)
+        d = cfg.d_model
+        params = {"embed": Embedding.init(ks[0], cfg.vocab_size, d)}
+        if cfg.positions == "learned":
+            params["pos_emb"] = normal_init(
+                ks[1], (cfg.max_seq_len, d), stddev=0.02)
+        pat = cfg.block_pattern
+        params["periods"] = tuple(
+            _stack_init(jax.random.fold_in(ks[2], i), cfg.n_periods,
+                        lambda k, b=blk: init_block(k, cfg, b))
+            for i, blk in enumerate(pat))
+        params["tail"] = tuple(
+            init_block(jax.random.fold_in(ks[3], i), cfg, blk)
+            for i, blk in enumerate(cfg.tail_blocks))
+        params["final_norm"] = (RMSNorm if cfg.norm == "rms"
+                                else LayerNorm).init(None, d)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = Linear.init(ks[4], d, cfg.vocab_size,
+                                            use_bias=False)
+        if mux.enabled:
+            params["mux_engine"] = MuxEngine.init(ks[5], mux, d)
+        return params
+
+    # ----------------------------------------------------------------- cache
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+                   dtype=jnp.bfloat16):
+        """batch = backbone batch (already divided by mux N)."""
+        pat = cfg.block_pattern
+
+        def one(blk):
+            return init_block_cache(cfg, blk, batch, capacity, dtype)
+
+        periods = tuple(
+            jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[one(blk) for _ in range(cfg.n_periods)])
+            if cfg.n_periods else None
+            for blk in pat)
+        tail = tuple(one(blk) for blk in cfg.tail_blocks)
+        return {"periods": periods, "tail": tail}
+
+    # ----------------------------------------------------------------- apply
+    @staticmethod
+    def apply(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+              mux: MuxSpec = MuxSpec(), cache=None, q_offset=0,
+              dtype=jnp.bfloat16, logits_out: bool = True,
+              use_kernels: bool = False, demux: bool = True,
+              extra_ctx: dict | None = None):
+        """Forward pass.
+
+        tokens: (NB, L) int32 — NB is the *instance* batch (mux N × device
+        batch).  embeds: optional precomputed (NB, L, D) (VLM/audio stubs).
+        cache: from ``init_cache`` (serving); None for training.
+        Returns dict(logits | hidden, aux, cache).
+        """
+        d = cfg.d_model
+        if embeds is None:
+            x = Embedding.apply(params["embed"], tokens, dtype=dtype)
+        else:
+            x = embeds.astype(dtype)
+        if cfg.embedding_scale:
+            x = x * jnp.asarray(math.sqrt(d), dtype)
+
+        # --- multiplex ------------------------------------------------
+        x = MuxEngine.combine(params.get("mux_engine", {}), mux, x)
+        b, l, _ = x.shape
+
+        # --- positions --------------------------------------------------
+        pos = q_offset + jnp.arange(l)
+        ctx = {"sin": None, "cos": None, "q_offset": q_offset}
+        if cfg.positions == "rope":
+            sin, cos = rope_frequencies(cfg.head_dim, pos,
+                                        theta=cfg.rope_theta)
+            ctx["sin"], ctx["cos"] = sin[None], cos[None]
+        elif cfg.positions == "learned":
+            x = x + params["pos_emb"].astype(dtype)[pos][None]
+        impl = cfg.attn_impl
+        if impl == "auto":
+            # long inputs (training or single-shot prefill) take the
+            # online-softmax chunked path; decode (l==1) stays naive
+            impl = "chunked" if l > 2048 else "naive"
+        ctx["impl"] = impl
+        ctx["use_kernels"] = use_kernels
+        if extra_ctx:
+            ctx.update(extra_ctx)
+
+        pat = cfg.block_pattern
+        decode = cache is not None
+        aux_total = jnp.zeros((), jnp.float32)
+
+        # --- scanned periods -------------------------------------------
+        def period_fn(carry, xs):
+            x, aux = carry
+            pparams, pcache = xs
+            new_caches = []
+            for i, blk in enumerate(pat):
+                c = pcache[i] if decode else {}
+                x, c, a = apply_block(pparams[i], cfg, blk, x, ctx, c)
+                new_caches.append(c)
+                aux = aux + a
+            return (x, aux), tuple(new_caches) if decode else None
+
+        n_per = cfg.n_periods
+        new_pc = None
+        if n_per:
+            if decode:
+                (x, aux_total), new_pc = jax.lax.scan(
+                    period_fn, (x, aux_total),
+                    (tuple(params["periods"]), tuple(cache["periods"])))
+            else:
+                def fn(carry, pparams):
+                    return period_fn(carry, (pparams, None))
+                scan_fn = (jax.checkpoint(fn, prevent_cse=False)
+                           if cfg.remat else fn)
+                (x, aux_total), _ = jax.lax.scan(
+                    scan_fn, (x, aux_total), tuple(params["periods"]))
+
+        # --- tail layers (unrolled) -------------------------------------
+        new_tail = []
+        for i, blk in enumerate(cfg.tail_blocks):
+            c = cache["tail"][i] if decode else {}
+            x, c, a = apply_block(params["tail"][i], cfg, blk, x, ctx, c)
+            new_tail.append(c)
+            aux_total = aux_total + a
+
+        x = (RMSNorm if cfg.norm == "rms" else LayerNorm).apply(
+            params["final_norm"], x)
+
+        # --- demultiplex -------------------------------------------------
+        if demux:
+            x = MuxEngine.separate(params.get("mux_engine", {}), mux, x,
+                                   use_kernel=use_kernels)
+
+        out = {"aux": aux_total}
+        if decode:
+            out["cache"] = {"periods": new_pc, "tail": tuple(new_tail)}
+        if logits_out:
+            out["logits"] = TransformerLM.logits(params, cfg, x)
+        else:
+            out["hidden"] = x
+        return out
+
+    @staticmethod
+    def logits(params, cfg: ModelConfig, hidden):
+        if cfg.tie_embeddings:
+            return Embedding.attend(params["embed"], hidden)
+        return Linear.apply(params["lm_head"], hidden)

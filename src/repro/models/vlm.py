@@ -1,0 +1,62 @@
+"""VLM (llava-next-mistral backbone; vision frontend stubbed).
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` provides
+precomputed anyres patch embeddings (B, n_patches, D_vis).  This module
+owns the multimodal projector (2-layer MLP, llava-style) and splices the
+projected patches in front of the token embeddings; the language backbone
+(incl. data multiplexing over the combined sequence) is TransformerLM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MuxSpec
+from repro.nn import Linear, Embedding
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+D_VISION = 1024  # CLIP-L/14 feature width (stub frontend emits this)
+
+
+class VLM:
+    @staticmethod
+    def init(key, cfg: ModelConfig, mux: MuxSpec = MuxSpec()):
+        k0, k1, k2 = jax.random.split(key, 3)
+        return {
+            "backbone": TransformerLM.init(k0, cfg, mux),
+            "proj1": Linear.init(k1, D_VISION, cfg.d_model),
+            "proj2": Linear.init(k2, cfg.d_model, cfg.d_model),
+        }
+
+    @staticmethod
+    def embed_multimodal(params, cfg: ModelConfig, tokens, patch_embeds,
+                         dtype=jnp.bfloat16):
+        """tokens: (NB, L_txt); patch_embeds: (NB, P, D_vis) ->
+        (NB, P + L_txt, D) with patches prepended (anyres tiling order)."""
+        pe = Linear.apply(params["proj2"],
+                          jax.nn.gelu(Linear.apply(
+                              params["proj1"], patch_embeds.astype(dtype))))
+        te = Embedding.apply(params["backbone"]["embed"], tokens, dtype=dtype)
+        return jnp.concatenate([pe, te], axis=1)
+
+    @staticmethod
+    def apply(params, cfg: ModelConfig, tokens=None, patch_embeds=None, *,
+              mux: MuxSpec = MuxSpec(), cache=None, q_offset=0,
+              dtype=jnp.bfloat16, use_kernels: bool = False,
+              extra_ctx=None):
+        if patch_embeds is not None:
+            embeds = VLM.embed_multimodal(params, cfg, tokens, patch_embeds,
+                                          dtype)
+            tokens = None
+        else:
+            embeds = None          # decode: text tokens only
+        return TransformerLM.apply(
+            params["backbone"], cfg, tokens, embeds=embeds, mux=mux,
+            cache=cache, q_offset=q_offset, dtype=dtype,
+            use_kernels=use_kernels, extra_ctx=extra_ctx)
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+                   dtype=jnp.bfloat16):
+        return TransformerLM.init_cache(cfg, batch, capacity, dtype)

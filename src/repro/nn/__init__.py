@@ -1,0 +1,25 @@
+"""Minimal functional NN substrate (no flax in this environment).
+
+Conventions:
+  * params are nested dicts of jnp arrays (pytrees);
+  * every layer exposes ``init(key, ...) -> params`` and
+    ``apply(params, x, ...) -> y`` as pure functions;
+  * parameters are stored fp32; compute dtype is passed explicitly.
+"""
+from repro.nn.initializers import normal_init, zeros_init, ones_init, truncated_normal_init
+from repro.nn.layers import (
+    Linear, Embedding, LayerNorm, RMSNorm, dropout,
+)
+from repro.nn.rope import rope_frequencies, apply_rope
+from repro.nn.attention import (
+    multi_head_attention, attention_core, make_attention_mask,
+)
+from repro.nn.activations import ACTIVATIONS
+
+__all__ = [
+    "normal_init", "zeros_init", "ones_init", "truncated_normal_init",
+    "Linear", "Embedding", "LayerNorm", "RMSNorm", "dropout",
+    "rope_frequencies", "apply_rope",
+    "multi_head_attention", "attention_core", "make_attention_mask",
+    "ACTIVATIONS",
+]

@@ -1,0 +1,23 @@
+"""Activation registry."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu_tanh(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def squared_relu(x):
+    return jnp.square(jax.nn.relu(x))
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": gelu_tanh,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,  # RWKV channel-mix
+    "tanh": jnp.tanh,
+}

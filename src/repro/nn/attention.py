@@ -1,0 +1,163 @@
+"""Attention primitives: naive, chunked (online-softmax), GQA, windows.
+
+Three implementations with one semantics:
+  * ``attention_core``          — naive O(L^2) materialized logits (tests,
+                                  small shapes, oracle for the others);
+  * ``chunked_attention_core``  — ``lax.scan`` over KV chunks with an
+                                  online softmax; never materializes the
+                                  (Lq, Lk) matrix.  Used for long-context
+                                  prefill and as the dry-run lowering path;
+  * Pallas flash kernel         — ``repro.kernels.flash_attention`` (TPU
+                                  target), selected at the model layer.
+
+Shape conventions:
+  q: (B, Lq, H, Dh);  k, v: (B, Lk, Hkv, Dh)  with  H % Hkv == 0.
+GQA is handled *inside* the cores by reshaping q to groups — kv is never
+materialized at H heads (that would defeat GQA's KV-bandwidth savings).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps softmax NaN-free on fully-masked rows
+
+
+def make_attention_mask(q_pos, kv_pos, *, causal: bool = True,
+                        window: int | None = None,
+                        kv_valid=None):
+    """Boolean (.., Lq, Lk) mask. True = attend.
+
+    q_pos / kv_pos: integer position arrays, shapes broadcastable to
+    (..., Lq) and (..., Lk).  ``window`` keeps kv within
+    ``q_pos - window < kv_pos`` (sliding window, causal only).
+    ``kv_valid``: optional (..., Lk) bool of valid cache slots.
+    """
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        mask &= k <= q
+    if window is not None:
+        mask &= k > q - window
+    if kv_valid is not None:
+        mask &= kv_valid[..., None, :]
+    return mask
+
+
+def _gqa_reshape(q, n_kv: int):
+    """(B, Lq, H, Dh) -> (B, Lq, Hkv, G, Dh)."""
+    b, lq, h, dh = q.shape
+    return q.reshape(b, lq, n_kv, h // n_kv, dh)
+
+
+def attention_core(q, k, v, *, mask=None, bias=None, scale: float | None = None,
+                   logit_softcap: float | None = None):
+    """Naive attention. mask: bool (.., Lq, Lk) broadcastable over heads.
+
+    Returns (B, Lq, H, Dh) in q.dtype; softmax in fp32.
+    """
+    b, lq, h, dh = q.shape
+    n_kv = k.shape[2]
+    scale = dh ** -0.5 if scale is None else scale
+    qg = _gqa_reshape(q * scale, n_kv)                    # (B,Lq,Hkv,G,Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    if logit_softcap is not None:
+        logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+    if bias is not None:
+        logits = logits + bias
+    if mask is not None:
+        # mask (..., Lq, Lk) -> broadcast over (Hkv, G)
+        m = mask[:, None, None] if mask.ndim == 3 else mask
+        logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, lq, h, dh)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "chunk_size",
+                                   "logit_softcap"))
+def chunked_attention_core(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           q_offset=0,
+                           chunk_size: int = 512,
+                           logit_softcap: float | None = None):
+    """Online-softmax attention, scanning KV in chunks of ``chunk_size``.
+
+    Memory: O(Lq * chunk) logits instead of O(Lq * Lk).  Positions are
+    ``q_offset + arange(Lq)`` for queries and ``arange(Lk)`` for keys
+    (standard packed-cache layout).  Fully-masked chunks still execute
+    (scan is shape-uniform) but contribute zero weight.
+    """
+    b, lq, h, dh = q.shape
+    lk = k.shape[1]
+    n_kv = k.shape[2]
+    g = h // n_kv
+    scale = dh ** -0.5
+    nchunk = -(-lk // chunk_size)
+    pad = nchunk * chunk_size - lk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk_size, n_kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk_size, n_kv, dh).transpose(1, 0, 2, 3, 4)
+
+    qg = (q * scale).reshape(b, lq, n_kv, g, dh)
+    q_pos = q_offset + jnp.arange(lq)
+
+    def step(carry, xs):
+        m_i, l_i, acc = carry                    # (B,Hkv,G,Lq), same, (B,Hkv,G,Lq,Dh)
+        kj, vj, j = xs                           # (B,C,Hkv,Dh), (B,C,Hkv,Dh), ()
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj).astype(jnp.float32)
+        if logit_softcap is not None:
+            logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+        kv_pos = j * chunk_size + jnp.arange(chunk_size)
+        mask = kv_pos[None, :] < lk              # padding
+        mask = jnp.broadcast_to(mask, (lq, chunk_size))
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_i, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, n_kv, g, lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, lq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, lq, dh), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, lq, h, dh).astype(q.dtype)
+
+
+def multi_head_attention(q, k, v, *, impl: str = "naive", mask=None,
+                         causal: bool = True, window: int | None = None,
+                         q_offset=0, chunk_size: int = 512,
+                         logit_softcap: float | None = None):
+    """Dispatch between implementations with identical semantics."""
+    if impl == "chunked":
+        if mask is not None:
+            raise ValueError("chunked path builds masks from positions")
+        return chunked_attention_core(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            chunk_size=chunk_size, logit_softcap=logit_softcap)
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            logit_softcap=logit_softcap)
+    if mask is None:
+        b, lq = q.shape[:2]
+        lk = k.shape[1]
+        mask = make_attention_mask(
+            q_offset + jnp.arange(lq), jnp.arange(lk),
+            causal=causal, window=window)[None]
+    return attention_core(q, k, v, mask=mask, logit_softcap=logit_softcap)

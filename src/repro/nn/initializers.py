@@ -1,0 +1,27 @@
+"""Parameter initializers (fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(stddev, dtype)
+
+
+def truncated_normal_init(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * jnp.asarray(stddev, dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def fanin_init(key, shape, dtype=jnp.float32):
+    """LeCun-normal on the penultimate dim (matmul fan-in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(fan_in, dtype) ** -0.5

@@ -1,0 +1,95 @@
+"""Core layers: Linear, Embedding, LayerNorm, RMSNorm, dropout.
+
+Functional style: ``Layer.init`` builds a param dict, ``Layer.apply`` is a
+pure function of (params, inputs).  Params live in fp32; ``apply`` casts to
+the compute dtype of its input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.initializers import normal_init, zeros_init, ones_init
+
+
+class Linear:
+    """y = x @ w (+ b).  w: (in, out) [or (in, *outs) for fused projections]."""
+
+    @staticmethod
+    def init(key, d_in: int, d_out, *, use_bias: bool = True, stddev: float = 0.02):
+        out_shape = (d_out,) if isinstance(d_out, int) else tuple(d_out)
+        p = {"w": normal_init(key, (d_in, *out_shape), stddev=stddev)}
+        if use_bias:
+            p["b"] = zeros_init(None, out_shape)
+        return p
+
+    @staticmethod
+    def apply(p, x):
+        w = p["w"].astype(x.dtype)
+        if w.ndim > 2:  # fused multi-output projection (in, a, b, ...)
+            y = jnp.tensordot(x, w, axes=1)
+        else:
+            y = x @ w
+        if "b" in p:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+
+class Embedding:
+    """Token embedding with optional logit tying (``attend``)."""
+
+    @staticmethod
+    def init(key, vocab: int, d: int, *, stddev: float = 0.02):
+        return {"table": normal_init(key, (vocab, d), stddev=stddev)}
+
+    @staticmethod
+    def apply(p, ids, dtype=jnp.float32):
+        return p["table"].astype(dtype)[ids]
+
+    @staticmethod
+    def attend(p, x):
+        """Tied-softmax logits: (..., d) @ (d, vocab)."""
+        return x @ p["table"].astype(x.dtype).T
+
+
+class LayerNorm:
+    @staticmethod
+    def init(_key, d: int, *, use_bias: bool = True):
+        p = {"scale": ones_init(None, (d,))}
+        if use_bias:
+            p["bias"] = zeros_init(None, (d,))
+        return p
+
+    @staticmethod
+    def apply(p, x, *, eps: float = 1e-6):
+        dt = x.dtype
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            y = y + p["bias"].astype(jnp.float32)
+        return y.astype(dt)
+
+
+class RMSNorm:
+    @staticmethod
+    def init(_key, d: int):
+        return {"scale": zeros_init(None, (d,))}  # gemma-style (1 + scale)
+
+    @staticmethod
+    def apply(p, x, *, eps: float = 1e-6):
+        dt = x.dtype
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+        return y.astype(dt)
+
+
+def dropout(key, x, rate: float, *, deterministic: bool):
+    if deterministic or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), jnp.zeros_like(x))

@@ -1,0 +1,26 @@
+"""Rotary position embeddings (RoPE), half-rotation convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, positions, *, theta: float = 10000.0,
+                     scale: float = 1.0):
+    """Return (sin, cos) of shape (*positions.shape, head_dim//2), fp32.
+
+    ``scale`` implements simple position-interpolation for long contexts
+    (positions are divided by ``scale``).
+    """
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = (positions.astype(jnp.float32) / scale)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., L, H, D). sin/cos: (..., L, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :].astype(x.dtype)  # add head axis
+    cos = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    AdamW, global_norm, linear_warmup_linear_decay,
+    linear_warmup_cosine_decay, default_decay_mask, default_trainable_mask,
+)
+from repro.optim.compression import (
+    quantize_int8, dequantize_int8, compressed_psum, compress_tree_psum,
+    init_error_state,
+)
+__all__ = ["AdamW", "global_norm", "linear_warmup_linear_decay",
+           "linear_warmup_cosine_decay", "default_decay_mask",
+           "default_trainable_mask", "quantize_int8", "dequantize_int8",
+           "compressed_psum", "compress_tree_psum", "init_error_state"]

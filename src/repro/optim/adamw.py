@@ -1,0 +1,129 @@
+"""AdamW with decoupled weight decay, global-norm clipping, per-path
+masks (no-decay for norms/biases; no-update for the fixed Gaussian mux
+keys) — built from scratch (no optax in this environment).
+
+State layout mirrors the param pytree (m, v same shapes), so the sharding
+rules that place params also place optimizer state; ZeRO-1-style extra
+sharding of (m, v) along the data axis is applied by
+``runtime.sharding.opt_state_sharding(zero=True)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def path_str(path) -> str:
+    return "/".join(getattr(k, "key", getattr(k, "idx", None)).__str__()
+                    for k in path)
+
+
+def default_decay_mask(path, leaf) -> bool:
+    """True = apply weight decay.  Skip norms, biases, 1-D params."""
+    s = path_str(path)
+    if leaf.ndim <= 1:
+        return False
+    for tok in ("ln", "norm", "bias", "scale"):
+        if tok in s:
+            return False
+    return True
+
+
+def default_trainable_mask(path, leaf) -> bool:
+    """False = frozen.  The paper keeps the Gaussian mux keys v fixed."""
+    s = path_str(path)
+    return not s.endswith("mux_engine/mux/v")
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float | None = 1.0
+    decay_mask: Callable = staticmethod(default_decay_mask)
+    trainable_mask: Callable = staticmethod(default_trainable_mask)
+
+    def init(self, params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.copy, zeros),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = global_norm(grads)
+
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(path, g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_ = self.b1 * m + (1 - self.b1) * g32
+            v_ = self.b2 * v + (1 - self.b2) * jnp.square(g32)
+            step = (m_ / b1c) / (jnp.sqrt(v_ / b2c) + self.eps)
+            if self.decay_mask(path, p):
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            if not self.trainable_mask(path, p):
+                step = jnp.zeros_like(step)
+                m_, v_ = m, v
+            return (-lr * step).astype(p.dtype), m_, v_
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+        ms = jax.tree.leaves(state["m"])
+        vs = jax.tree.leaves(state["v"])
+        ps = jax.tree.leaves(params)
+        out = [upd(path, g, m, v, p)
+               for (path, g), m, v, p in zip(flat, ms, vs, ps)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return updates, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+    def apply_updates(self, params, updates):
+        return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+# --------------------------------------------------------------------------
+# LR schedules
+# --------------------------------------------------------------------------
+
+def linear_warmup_linear_decay(peak_lr: float, warmup: int, total: int,
+                               floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((total - step) / max(total - warmup, 1), 0.0, 1.0)
+        decay = floor + (peak_lr - floor) * frac
+        return jnp.where(step < warmup, warm, decay)
+    return sched
+
+
+def linear_warmup_cosine_decay(peak_lr: float, warmup: int, total: int,
+                               floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, decay)
+    return sched

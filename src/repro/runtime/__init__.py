@@ -1,0 +1,10 @@
+from repro.runtime.sharding import (
+    param_specs, param_shardings, batch_spec, batch_shardings,
+    opt_state_specs, cache_specs, data_axes, named, spec_for_param,
+)
+from repro.runtime.fault_tolerance import (
+    Supervisor, StragglerDetector, DeviceFailure,
+)
+from repro.runtime.elastic import plan_elastic, make_elastic_mesh, ElasticPlan
+from repro.runtime.pipeline_parallel import pipeline_apply, stack_stages
+from repro.runtime.dp_step import make_compressed_dp_step, init_dp_state

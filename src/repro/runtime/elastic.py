@@ -1,0 +1,45 @@
+"""Elastic scaling: recompute mesh + batch from a surviving-device count.
+
+After losing hosts, the runtime (1) picks the largest usable device count
+that preserves the model axis (TP degree is fixed by memory), (2) derives
+a new (data, model) mesh, (3) re-rounds the global batch to the new DP
+degree, and (4) restores the last checkpoint with the new shardings —
+resharding happens in checkpoint.restore via device_put.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    n_devices: int
+    mesh_shape: tuple          # (data, model) [single pod after shrink]
+    global_batch: int
+    dropped: int
+
+
+def plan_elastic(surviving: int, *, model_parallel: int,
+                 old_global_batch: int, microbatch: int = 1) -> ElasticPlan:
+    """Largest mesh `(data, model_parallel)` fitting `surviving` devices;
+    global batch re-rounded to a multiple of the new data degree."""
+    if surviving < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {surviving} devices")
+    data = surviving // model_parallel
+    usable = data * model_parallel
+    per_replica = max(1, old_global_batch // max(data, 1) // microbatch) \
+        * microbatch
+    new_batch = per_replica * data
+    return ElasticPlan(usable, (data, model_parallel), new_batch,
+                       dropped=surviving - usable)
+
+
+def make_elastic_mesh(plan: ElasticPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    devs = np.asarray(devices[:plan.n_devices]).reshape(plan.mesh_shape)
+    return Mesh(devs, ("data", "model"))

@@ -1,0 +1,212 @@
+"""Sharding rules: param path + shape -> PartitionSpec, with divisibility
+fallback.
+
+Scheme (Megatron-style TP on the 'model' axis, DP over ('pod','data')):
+
+  * column-parallel (up/gate/qkv projections): shard the OUTPUT feature
+    axis on 'model';
+  * row-parallel (down/output projections): shard the INPUT feature axis
+    on 'model' — their product with a column-parallel producer needs one
+    all-reduce per pair, which GSPMD inserts;
+  * expert-stacked MoE weights (E, d, f): shard E on 'model' (expert
+    parallelism) when divisible, else fall back to the feature axis;
+  * embeddings (V, d): shard the vocab axis when divisible (gathers stay
+    local; logits reduce-scatter over vocab shards);
+  * every rule checks divisibility by the mesh axis size and falls back
+    down a candidate list, ending at replication.  Non-divisible cases
+    (granite's 24 heads on a 16-way axis, 49155 vocab) therefore still
+    compile — with a worse roofline, which §Perf measures.
+
+Activations: batch on ('pod','data'); sequence/experts resharded by GSPMD
+as needed.  Optimizer state follows params; optional ZeRO-1 shards
+otherwise-replicated large states over 'data'.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param-name classes (match the LAST named segments of the path)
+_ROW_PARALLEL = re.compile(
+    r"(down|wo|xwo|w_out|cm_v|shared_down|w2)(/w)?$")
+_COL_PARALLEL = re.compile(
+    r"(up|gate|wq|wk|wv|xwq|xwk|xwv|w1|w1h|w1k|w_in|w_gate|w_a|w_i|w_r|w_k|"
+    r"w_v|w_g|cm_k|shared_up|shared_gate|proj1|proj2|dense|pool|out|"
+    r"transform|lm_head)(/w)?$")
+_EXPERT_STACKED = re.compile(r"(w_up|w_down|w_gate)$")
+_EMBED = re.compile(r"(embed/table|table)$")
+
+
+def path_of(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def spec_for_param(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter.
+
+    Stacked scan params (under ``periods/``) carry a leading layer dim
+    that must NEVER be model-sharded — the rules below apply to the
+    per-layer dims, with the stack dim pinned to None.
+    """
+    dims = list(shape)
+    nd = len(dims)
+    stacked = 1 if ("periods/" in path and nd >= 2) else 0
+    body = dims[stacked:]
+    bnd = len(body)
+    if bnd <= 1 or "model" not in mesh.shape:
+        return P()
+
+    def try_shard(body_axis: int) -> P | None:
+        if _fits(body[body_axis], mesh, "model"):
+            spec = [None] * nd
+            spec[stacked + body_axis] = "model"
+            return P(*spec)
+        return None
+
+    def first(*order):
+        for ax in order:
+            s = try_shard(ax)
+            if s:
+                return s
+        return P()
+
+    # MoE expert-stacked: (E, d, f) — expert parallelism first
+    if _EXPERT_STACKED.search(path) and bnd == 3:
+        return first(0, 2, 1)
+
+    # embedding (V, d): vocab axis, fall back to d
+    if _EMBED.search(path):
+        return first(0, 1)
+
+    if _ROW_PARALLEL.search(path):
+        # input-feature axis (first), fall back to output
+        return first(0, *range(bnd - 1, 0, -1))
+
+    if _COL_PARALLEL.search(path):
+        # output feature axes, prefer head axis for (d, H, hd)
+        order = (1, 2) if bnd == 3 else tuple(range(bnd - 1, 0, -1))
+        return first(*order)
+
+    # default: largest non-leading dim on model if divisible
+    return first(*sorted(range(1, bnd), key=lambda i: -body[i]),
+                 0)
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec mirroring params."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for_param(path_of(kp), v.shape, mesh) for kp, v in flat]
+    return treedef.unflatten(specs)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def data_axes(mesh: Mesh):
+    """The DP axes tuple present in this mesh ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """Shard the leading (batch) dim over all DP axes."""
+    return P(data_axes(mesh), *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(mesh, x.ndim)), batch)
+
+
+def opt_state_specs(params, mesh: Mesh, *, zero: bool = True,
+                    min_size: int = 1 << 16):
+    """Optimizer state (m, v follow params; ZeRO-1: shard big replicated
+    moments across 'data')."""
+    pspecs = param_specs(params, mesh)
+
+    def zero_shard(spec: P, leaf):
+        if not zero or "data" not in mesh.shape:
+            return spec
+        if leaf.size < min_size or any(s is not None for s in spec):
+            return spec
+        # fully replicated & big: shard dim0 over data if divisible
+        if leaf.shape and _fits(leaf.shape[0], mesh, "data"):
+            return P("data", *([None] * (leaf.ndim - 1)))
+        return spec
+
+    moments = jax.tree.map(zero_shard, pspecs, params)
+    return {"m": moments, "v": moments, "count": P()}
+
+
+def cache_specs(cache, mesh: Mesh):
+    """KV/state-cache PartitionSpecs, keyed on the cache field name
+    (leaves may carry a leading stacked-period dim, so positions are
+    resolved from the END of the shape):
+
+      k/v/xk/xv (…, B, C, Hkv, hd) — batch on DP; Hkv (else hd) on model
+      s         (…, B, H, hk, hv)  — batch on DP; H on model
+      h/shift_* (…, B, W)          — batch on DP; W on model
+      conv      (…, B, taps, W)    — batch on DP; W on model
+      pos/idx                      — replicated
+    """
+    dp_axes = data_axes(mesh)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    def one(kp, x):
+        name = path_of(kp).rsplit("/", 1)[-1]
+        spec = [None] * x.ndim
+
+        def dp_for(dim_idx):
+            return (dp_axes if dp_size > 1 and
+                    x.shape[dim_idx] % dp_size == 0 else None)
+
+        if name in ("k", "v", "xk", "xv"):
+            spec[x.ndim - 4] = dp_for(x.ndim - 4)
+            if _fits(x.shape[x.ndim - 2], mesh, "model"):
+                spec[x.ndim - 2] = "model"
+            elif _fits(x.shape[x.ndim - 1], mesh, "model"):
+                spec[x.ndim - 1] = "model"
+        elif name == "s":
+            spec[x.ndim - 4] = dp_for(x.ndim - 4)
+            if _fits(x.shape[x.ndim - 3], mesh, "model"):
+                spec[x.ndim - 3] = "model"
+        elif name in ("h", "shift_tm", "shift_cm"):
+            spec[x.ndim - 2] = dp_for(x.ndim - 2)
+            if _fits(x.shape[x.ndim - 1], mesh, "model"):
+                spec[x.ndim - 1] = "model"
+        elif name == "conv":
+            spec[x.ndim - 3] = dp_for(x.ndim - 3)
+            if _fits(x.shape[x.ndim - 1], mesh, "model"):
+                spec[x.ndim - 1] = "model"
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return treedef.unflatten([one(kp, v) for kp, v in flat])
+
+
+def named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+from repro.serve.engine import (
+    ServeConfig, init_cache, prefill, decode_step, greedy_generate,
+    backbone_batch,
+)
+from repro.serve.batcher import MuxBatcher, Request

@@ -1,0 +1,75 @@
+"""Request batcher with multiplex slots.
+
+Incoming requests are packed into a (N_mux × B) instance grid: B backbone
+slots, each carrying N multiplexed streams.  Under light load the batcher
+fills spare mux slots with *duplicates* of live requests and averages
+their logits — the paper's ensembling mode (§5.4) as a load-adaptive
+serving policy: free throughput headroom is converted into accuracy.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: object                  # token array / (tokens, extra)
+    max_new: int = 16
+    done: bool = False
+    output: list = field(default_factory=list)
+
+
+@dataclass
+class MuxBatcher:
+    n_mux: int
+    backbone_batch: int
+    queue: collections.deque = field(default_factory=collections.deque)
+    _uid: itertools.count = field(default_factory=itertools.count)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_mux * self.backbone_batch
+
+    def submit(self, prompt, max_new: int = 16) -> Request:
+        r = Request(uid=next(self._uid), prompt=prompt, max_new=max_new)
+        self.queue.append(r)
+        return r
+
+    def next_batch(self):
+        """Pack up to capacity requests; pad spare slots with duplicates.
+
+        Returns (requests_in_slot, slot_owner): lists of length capacity.
+        slot_owner[i] = index into the unique requests of this batch; a
+        request owning k slots gets its k logit streams averaged
+        (ensembling).  Empty queue -> (None, None).
+        """
+        if not self.queue:
+            return None, None
+        live = []
+        while self.queue and len(live) < self.capacity:
+            live.append(self.queue.popleft())
+        owners = list(range(len(live)))
+        # round-robin duplicate to fill spare mux slots (ensembling)
+        for i in range(self.capacity - len(live)):
+            owners.append(i % len(live))
+        slots = [live[o] for o in owners]
+        return slots, owners
+
+    @staticmethod
+    def combine_logits(logits, owners, n_unique):
+        """Average the logit streams of duplicated requests.
+
+        logits: (capacity, ...); owners: list[int] of len capacity.
+        Returns (n_unique, ...) ensembled logits.
+        """
+        import jax.numpy as jnp
+        acc = jnp.zeros((n_unique,) + logits.shape[1:], logits.dtype)
+        cnt = jnp.zeros((n_unique,) + (1,) * (logits.ndim - 1),
+                        logits.dtype)
+        owners = jnp.asarray(owners)
+        acc = acc.at[owners].add(logits)
+        cnt = cnt.at[owners].add(1.0)
+        return acc / cnt

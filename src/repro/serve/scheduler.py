@@ -1,0 +1,115 @@
+"""Continuous batching on top of the mux engine.
+
+Production serving doesn't run fill-drain batches: requests join and
+leave the decode loop at every step.  ``ContinuousScheduler`` maintains
+a fixed grid of N_mux × B backbone slots; finished requests free their
+slot immediately and a waiting request is prefilled into it, so the
+backbone step never idles while the queue is non-empty.
+
+The slot grid maps onto the muxed decode step: slot (i, j) is mux
+stream i of backbone row j.  Prefill of a joining request only has to
+produce that stream's KV contribution — with the shared-cache mux
+layout the whole backbone row's cache is re-prefilled from the row's
+current prompts (cheap at small N; the optimization of incremental
+per-stream cache writes is noted in DESIGN.md as future work).
+
+This module is deliberately jit-free (policy layer); the compute calls
+go through ``serve.engine``.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StreamSlot:
+    request: object = None        # serve.batcher.Request | None
+    pos: int = 0                  # next decode position
+    prompt_len: int = 0
+
+
+@dataclass
+class ContinuousScheduler:
+    n_mux: int
+    backbone_batch: int
+    max_len: int
+    queue: collections.deque = field(default_factory=collections.deque)
+    slots: list = field(init=False)
+    steps: int = field(default=0, init=False)
+    completed: list = field(default_factory=list, init=False)
+
+    def __post_init__(self):
+        self.slots = [[StreamSlot() for _ in range(self.n_mux)]
+                      for _ in range(self.backbone_batch)]
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, request):
+        self.queue.append(request)
+
+    def _free(self):
+        return [(j, i) for j in range(self.backbone_batch)
+                for i in range(self.n_mux)
+                if self.slots[j][i].request is None]
+
+    @property
+    def n_active(self):
+        return sum(1 for row in self.slots for s in row
+                   if s.request is not None)
+
+    # -- scheduling step ----------------------------------------------------
+    def admit(self):
+        """Place queued requests into free slots.  Returns the list of
+        backbone rows whose composition changed (need re-prefill)."""
+        dirty_rows = set()
+        for (j, i) in self._free():
+            if not self.queue:
+                break
+            r = self.queue.popleft()
+            self.slots[j][i] = StreamSlot(
+                request=r, pos=len(r.prompt), prompt_len=len(r.prompt))
+            dirty_rows.add(j)
+        return sorted(dirty_rows)
+
+    def row_prompts(self, j: int, pad_id: int = 0):
+        """Current token sequences of row j's N streams, right-padded to
+        a common length (joining requests mid-flight carry their prompt +
+        generated tokens)."""
+        seqs = []
+        maxlen = 1
+        for s in self.slots[j]:
+            toks = (list(s.request.prompt) + s.request.output
+                    if s.request else [pad_id])
+            seqs.append(toks)
+            maxlen = max(maxlen, len(toks))
+        arr = np.full((self.n_mux, maxlen), pad_id, np.int32)
+        for i, t in enumerate(seqs):
+            arr[i, :len(t)] = t
+        return arr
+
+    def record_tokens(self, tokens):
+        """tokens: (N_mux * B,) next token per stream (mux-major order:
+        stream i of row j at index i * B + j).  Retires finished
+        requests; returns number retired."""
+        retired = 0
+        for i in range(self.n_mux):
+            for j in range(self.backbone_batch):
+                s = self.slots[j][i]
+                if s.request is None:
+                    continue
+                s.request.output.append(int(tokens[i * self.backbone_batch + j]))
+                s.pos += 1
+                done = (len(s.request.output) >= s.request.max_new or
+                        s.pos >= self.max_len)
+                if done:
+                    s.request.done = True
+                    self.completed.append(s.request)
+                    self.slots[j][i] = StreamSlot()
+                    retired += 1
+        self.steps += 1
+        return retired
+
+    def utilization(self) -> float:
+        return self.n_active / (self.n_mux * self.backbone_batch)

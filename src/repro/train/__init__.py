@@ -1,0 +1,7 @@
+from repro.train.losses import (
+    softmax_xent, causal_lm_loss, sigmoid_bce, chunked_vocab_xent,
+)
+from repro.train.step import make_train_step, jit_step
+from repro.train import mux_stages
+__all__ = ["softmax_xent", "causal_lm_loss", "sigmoid_bce",
+           "chunked_vocab_xent", "make_train_step", "jit_step", "mux_stages"]

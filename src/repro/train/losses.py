@@ -1,0 +1,79 @@
+"""Loss functions (fp32 reductions) + memory-lean chunked-vocab variant."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, weights=None):
+    """logits (..., V); labels (...) int; weights (...) or None."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if weights is None:
+        return nll.mean()
+    return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def causal_lm_loss(logits, tokens, weights=None):
+    """Next-token prediction: logits[t] predicts tokens[t+1]."""
+    lg = logits[:, :-1]
+    lb = tokens[:, 1:]
+    w = None if weights is None else weights[:, 1:]
+    return softmax_xent(lg, lb, w)
+
+
+def sigmoid_bce(logits, labels, weights=None):
+    """ELECTRA RTD: logits (...), labels in {0,1}."""
+    lg = logits.astype(jnp.float32)
+    ls = jnp.clip(lg, 0) - lg * labels + jnp.log1p(jnp.exp(-jnp.abs(lg)))
+    if weights is None:
+        return ls.mean()
+    return (ls * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def chunked_vocab_xent(hidden, table, labels, weights=None, *,
+                       bias=None, chunk: int = 512):
+    """Tied-softmax cross-entropy WITHOUT materializing (B, L, V) logits.
+
+    Scans over sequence chunks; per step the live logits are
+    (B, chunk, V).  For V=256k this cuts peak activation memory by
+    L/chunk (the dominant train-memory term for big-vocab archs — see
+    EXPERIMENTS.md §Perf).
+    hidden: (B, L, D); table: (V, D); labels: (B, L).
+    """
+    b, l, d = hidden.shape
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        w = jnp.zeros((b, l), jnp.float32) if weights is None else weights
+        weights = jnp.pad(w, ((0, 0), (0, pad)))
+    elif weights is None:
+        weights = jnp.ones((b, l), jnp.float32)
+
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    wc = weights.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    v = table.shape[0]
+
+    def step(acc, xs):
+        h, lab, w = xs
+        logits = h @ table.astype(h.dtype).T
+        if bias is not None:
+            logits = logits + bias.astype(logits.dtype)
+        lg = logits.astype(jnp.float32)
+        # label logit via one-hot contraction — reduces locally on each
+        # vocab shard (take_along_axis would all-gather the logits)
+        m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+        lse = m[..., 0] + jnp.log(jnp.exp(lg - m).sum(axis=-1))
+        onehot = jax.nn.one_hot(lab, v, dtype=lg.dtype)
+        ll = (lg * onehot).sum(axis=-1)
+        nll = lse - ll
+        num, den = acc
+        return (num + (nll * w).sum(), den + w.sum()), None
+
+    (num, den), _ = jax.lax.scan(
+        step, (jnp.zeros(()), jnp.zeros(())), (hc, lc, wc))
+    return num / jnp.maximum(den, 1.0)

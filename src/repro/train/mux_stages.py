@@ -1,0 +1,91 @@
+"""The paper's three-stage MUX-PLM training procedure (Fig. 1):
+
+  stage 1 — token-retrieval warmup: auto-encode all N×L tokens from the
+            multiplexed representation (primes mux/demux);
+  stage 2 — multiplexed pre-training: MLM (MUX-BERT) or replaced-token
+            detection with a uniform-random generator (MUX-ELECTRA);
+  stage 3 — multiplexed fine-tuning: sequence or token classification.
+
+Each stage builder returns loss_fn(params, batch, rng) -> (loss, metrics)
+compatible with train.step.make_train_step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MuxSpec, retrieval_loss, retrieval_accuracy
+from repro.models.bert import MuxBERT
+from repro.data.synthetic import mlm_mask, electra_corrupt
+from repro.train.losses import softmax_xent, sigmoid_bce
+
+
+def retrieval_stage(cfg, mux: MuxSpec, dtype=jnp.float32):
+    def loss_fn(params, batch, rng):
+        tokens = batch["tokens"]
+        logits = MuxBERT.mlm_logits(params, cfg, tokens, mux=mux,
+                                    dtype=dtype)
+        loss = retrieval_loss(logits, tokens)
+        acc = retrieval_accuracy(logits, tokens)
+        return loss, {"retrieval_acc": acc}
+    return loss_fn
+
+
+def mlm_stage(cfg, mux: MuxSpec, *, mask_rate: float = 0.15,
+              retrieval_rate: float = 0.0, dtype=jnp.float32):
+    """Masked-LM pre-training; optional auxiliary retrieval objective
+    (paper Table 12 ablation, weight = retrieval_rate)."""
+    def loss_fn(params, batch, rng):
+        tokens = batch["tokens"]
+        inputs, labels, weights = mlm_mask(rng, tokens,
+                                           vocab=cfg.vocab_size,
+                                           rate=mask_rate)
+        logits = MuxBERT.mlm_logits(params, cfg, inputs, mux=mux,
+                                    dtype=dtype)
+        loss = softmax_xent(logits, labels, weights)
+        metrics = {"mlm_loss": loss}
+        if retrieval_rate > 0:
+            r = retrieval_loss(logits, tokens,
+                               valid_mask=1.0 - weights)
+            loss = loss + retrieval_rate * r
+            metrics["retrieval_aux"] = r
+        return loss, metrics
+    return loss_fn
+
+
+def electra_stage(cfg, mux: MuxSpec, *, replace_rate: float = 0.15,
+                  dtype=jnp.float32):
+    """Replaced-token detection with the uniform-random generator."""
+    def loss_fn(params, batch, rng):
+        tokens = batch["tokens"]
+        inputs, is_replaced = electra_corrupt(rng, tokens,
+                                              vocab=cfg.vocab_size,
+                                              rate=replace_rate)
+        logits = MuxBERT.rtd_logits(params, cfg, inputs, mux=mux,
+                                    dtype=dtype)
+        loss = sigmoid_bce(logits, is_replaced)
+        acc = ((logits > 0) == (is_replaced > 0.5)).mean()
+        return loss, {"rtd_acc": acc}
+    return loss_fn
+
+
+def classification_stage(cfg, mux: MuxSpec, dtype=jnp.float32):
+    """Fine-tune: params = {'model':…, 'head':…}; batch has labels."""
+    def loss_fn(params, batch, rng):
+        logits = MuxBERT.classify(params["model"], params["head"], cfg,
+                                  batch["tokens"], mux=mux, dtype=dtype)
+        loss = softmax_xent(logits, batch["labels"])
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return loss, {"accuracy": acc}
+    return loss_fn
+
+
+def token_classification_stage(cfg, mux: MuxSpec, dtype=jnp.float32):
+    def loss_fn(params, batch, rng):
+        logits = MuxBERT.classify_tokens(params["model"], params["head"],
+                                         cfg, batch["tokens"], mux=mux,
+                                         dtype=dtype)
+        loss = softmax_xent(logits, batch["tags"])
+        acc = (logits.argmax(-1) == batch["tags"]).mean()
+        return loss, {"accuracy": acc}
+    return loss_fn

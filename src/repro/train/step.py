@@ -1,0 +1,63 @@
+"""Train-step factory: value_and_grad + AdamW + optional microbatch
+accumulation (final-microbatch-only reduction happens implicitly under
+GSPMD: the scan accumulates local grads, the mean enters the collective
+once at optimizer time)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(loss_fn: Callable, optimizer, *, n_microbatches: int = 1,
+                    donate: bool = True):
+    """loss_fn(params, batch, rng) -> (loss, metrics_dict).
+
+    Returns step(params, opt_state, batch, rng) ->
+        (params, opt_state, metrics).  Batch leaves must have leading dim
+    divisible by n_microbatches (split along axis 0).
+    """
+
+    def grads_of(params, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, rng)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, rng):
+        if n_microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch, rng)
+        else:
+            def split(x):
+                return x.reshape(n_microbatches, x.shape[0] // n_microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            rngs = jax.random.split(rng, n_microbatches)
+
+            def body(acc, xs):
+                mb, r = xs
+                loss, metrics, grads = grads_of(params, mb, r)
+                g_acc, l_acc = acc
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), metrics = jax.lax.scan(
+                body, (g0, jnp.zeros(())), (micro, rngs))
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        updates, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        params = optimizer.apply_updates(params, updates)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return step
+
+
+def jit_step(step, donate: bool = True):
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())

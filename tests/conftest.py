@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests must see the real (single) CPU device — only launch/dryrun.py may
+# request the 512 placeholder devices
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

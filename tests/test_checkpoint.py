@@ -1,0 +1,78 @@
+"""Checkpointing: atomic roundtrip, keep-K, async manager, structure
+validation, resharding restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (save_checkpoint, restore_checkpoint,
+                              available_steps, AsyncCheckpointManager)
+
+TREE = {"a": jnp.arange(12.0).reshape(3, 4),
+        "b": {"c": jnp.ones((8,), jnp.int32),
+              "d": jnp.full((2, 2), 3.5)}}
+
+
+def test_roundtrip_and_keep_k(tmp_path):
+    d = str(tmp_path)
+    for s in (5, 10, 15, 20):
+        save_checkpoint(d, s, TREE, metadata={"s": s}, keep_k=2)
+    assert available_steps(d) == [15, 20]
+    r, step, md = restore_checkpoint(d, TREE)
+    assert step == 20 and md["s"] == 20
+    for k, v in jax.tree_util.tree_leaves_with_path(r):
+        pass
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), r, TREE)
+
+
+def test_restore_specific_step(tmp_path):
+    d = str(tmp_path)
+    t1 = {"a": jnp.zeros((2,))}
+    t2 = {"a": jnp.ones((2,))}
+    save_checkpoint(d, 1, t1)
+    save_checkpoint(d, 2, t2)
+    r, step, _ = restore_checkpoint(d, t1, step=1)
+    assert step == 1 and float(r["a"][0]) == 0.0
+
+
+def test_structure_validation(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, TREE)
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, {"unknown": jnp.zeros((1,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.zeros((5, 5)),
+                               "b": TREE["b"]})
+
+
+def test_no_partial_checkpoint_on_failure(tmp_path):
+    """tmp dir never counts as a checkpoint (atomic rename contract)."""
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_000000099.tmp"))
+    assert available_steps(d) == []
+
+
+def test_async_manager(tmp_path):
+    d = str(tmp_path)
+    mgr = AsyncCheckpointManager(d, keep_k=2)
+    mgr.save(1, TREE)
+    mgr.save(2, TREE)          # waits for 1 internally
+    mgr.wait()
+    assert available_steps(d) == [1, 2]
+    r, step, _ = mgr.restore(TREE)
+    assert step == 2
+
+
+def test_restore_with_shardings(tmp_path):
+    """Elastic restore: device_put with explicit (single-device) sharding
+    — the same path reshards across meshes on a pod."""
+    from jax.sharding import SingleDeviceSharding
+    d = str(tmp_path)
+    save_checkpoint(d, 3, TREE)
+    sh = jax.tree.map(
+        lambda _: SingleDeviceSharding(jax.devices()[0]), TREE)
+    r, _, _ = restore_checkpoint(d, TREE, shardings=sh)
+    assert r["a"].sharding == SingleDeviceSharding(jax.devices()[0])

@@ -1,0 +1,104 @@
+"""The roofline's HLO analyzer: trip-count-aware FLOPs must equal the
+unrolled ground truth; collective parsing must see shard_map psums."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_hlo, shape_bytes
+
+X = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+
+def _text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scanned_equals_unrolled_flops():
+    def unrolled(x, w):
+        for _ in range(6):
+            x = jnp.tanh(x @ w)
+        return x
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=6)[0]
+
+    fu = analyze(_text(unrolled, X, W))["flops"]
+    fs = analyze(_text(scanned, X, W))["flops"]
+    want = 6 * 2 * 128 * 256 * 256
+    assert fu == want
+    assert fs == want
+
+
+def test_nested_scan_multiplies():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    f = analyze(_text(nested, X, W))["flops"]
+    assert f == 12 * 2 * 128 * 256 * 256
+
+
+def test_tuple_shape_with_index_comments():
+    """Shapes like (s32[], f32[2,3], /*index=5*/ f32[4]) must parse."""
+    s = "(s32[], f32[2,3]{1,0}, /*index=5*/f32[4]{0})"
+    assert shape_bytes(s) == 4 + 24 + 16
+
+
+def test_collectives_seen_inside_loops():
+    """A psum inside a scan body must be scaled by the trip count."""
+    import os
+    # single device: use a trivial mesh psum via jnp sum... instead test
+    # the regex path on a synthetic HLO snippet
+    hlo = """
+HloModule test
+
+%body (arg: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %arg = (s32[], f32[64,64]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%arg), index=0
+  %g1 = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[64,64]{1,0} all-reduce(%g1), replica_groups={}
+  %c1 = s32[] constant(1)
+  %one = s32[] add(%g0, %c1)
+  ROOT %t = (s32[], f32[64,64]{1,0}) tuple(%one, %ar)
+}
+
+%cond (arg: (s32[], f32[64,64])) -> pred[] {
+  %arg = (s32[], f32[64,64]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%arg), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g0, %k), direction=LT
+}
+
+ENTRY %main (x: f32[64,64]) -> f32[64,64] {
+  %x = f32[64,64]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t0 = (s32[], f32[64,64]{1,0}) tuple(%c0, %x)
+  %w = (s32[], f32[64,64]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    a = analyze(hlo)
+    assert a["collectives"]["bytes"]["all-reduce"] == 7 * 64 * 64 * 4
+    assert a["collectives"]["counts"]["all-reduce"] == 7
+
+
+def test_traffic_slice_not_full_operand():
+    """dynamic-slice of a big stacked buffer must count sliced bytes."""
+    big = jax.ShapeDtypeStruct((32, 1024, 1024), jnp.float32)
+
+    def f(x):
+        def body(c, i):
+            return c + jax.lax.dynamic_slice_in_dim(x, i, 1, 0)[0], None
+        return jax.lax.scan(body, jnp.zeros((1024, 1024)),
+                            jnp.arange(32))[0]
+
+    a = analyze(_text(f, big))
+    # traffic should be ~32 slices * 2 * 4MB + loop state, far below
+    # 32 * full-buffer (4.3 GB)
+    assert a["traffic_bytes"] < 1.5e9

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.mux_combine import mux_combine
+from repro.kernels.demux_rsa import demux_rsa
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6 import rwkv6_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, k=0, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.fold_in(KEY, k), shape) *
+            scale).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+@pytest.mark.parametrize("n,t,d", [(2, 64, 128), (5, 100, 96), (10, 33, 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mux_combine(n, t, d, dtype):
+    x = rand((n, t, d), 1, dtype)
+    v = rand((n, d), 2, dtype)
+    got = mux_combine(x, v, block_t=32, block_d=64, interpret=True)
+    want = ref.mux_combine_ref(x.astype(jnp.float32),
+                               v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=TOL[dtype],
+                               rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("n,t,d,f", [(2, 40, 32, 64), (4, 64, 64, 160),
+                                     (10, 17, 48, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_demux_rsa(n, t, d, f, dtype):
+    h = rand((t, d), 1, dtype)
+    k = rand((n, d), 2, dtype)
+    w1h = rand((d, f), 3, dtype, 0.2)
+    w1k = rand((d, f), 4, dtype, 0.2)
+    b1 = rand((f,), 5, dtype, 0.2)
+    w2 = rand((f, d), 6, dtype, 0.2)
+    b2 = rand((d,), 7, dtype, 0.2)
+    got = demux_rsa(h, k, w1h, w1k, b1, w2, b2, block_t=16, block_f=64,
+                    interpret=True)
+    want = ref.demux_rsa_ref(*(a.astype(jnp.float32) for a in
+                               (h, k, w1h, w1k, b1, w2, b2)))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want),
+                               atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("h,hkv,lq,lk", [(4, 4, 64, 64), (4, 2, 50, 50),
+                                         (8, 1, 32, 96)])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (True, 13, None), (False, None, None),
+    (True, None, 20.0)])
+def test_flash_attention(h, hkv, lq, lk, causal, window, softcap):
+    b, dh = 2, 32
+    q = rand((b, lq, h, dh), 1)
+    k = rand((b, lk, hkv, dh), 2)
+    v = rand((b, lk, hkv, dh), 3)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_softcap=softcap, block_q=16, block_k=16,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   logit_softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_flash_attention_bf16():
+    b, l, h, dh = 1, 64, 2, 32
+    q = rand((b, l, h, dh), 1, jnp.bfloat16)
+    k = rand((b, l, h, dh), 2, jnp.bfloat16)
+    v = rand((b, l, h, dh), 3, jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("b,l,h,d,chunk", [(1, 32, 2, 8, 8),
+                                           (2, 64, 3, 16, 16),
+                                           (1, 64, 1, 32, 64)])
+def test_rwkv6(b, l, h, d, chunk):
+    r = rand((b, l, h, d), 1)
+    k = rand((b, l, h, d), 2, scale=0.5)
+    v = rand((b, l, h, d), 3)
+    logw = -jnp.exp(rand((b, l, h, d), 4, scale=0.5))
+    u = rand((h, d), 5, scale=0.1)
+    s0 = rand((b, h, d, d), 6, scale=0.1)
+    got_o, got_s = rwkv6_chunked(r, k, v, logw, u, s0, chunk=chunk,
+                                 interpret=True)
+    want_o, want_s = ref.rwkv6_ref(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_rwkv6_state_chaining():
+    """Running two halves with carried state == one full pass."""
+    b, l, h, d = 1, 64, 2, 8
+    args = [rand((b, l, h, d), i) for i in range(3)]
+    logw = -jnp.exp(rand((b, l, h, d), 9, scale=0.5))
+    u = rand((h, d), 5, scale=0.1)
+    s0 = jnp.zeros((b, h, d, d))
+    o_full, s_full = rwkv6_chunked(*args, logw, u, s0, chunk=16,
+                                   interpret=True)
+    half = l // 2
+    o1, s1 = rwkv6_chunked(*(a[:, :half] for a in args), logw[:, :half],
+                           u, s0, chunk=16, interpret=True)
+    o2, s2 = rwkv6_chunked(*(a[:, half:] for a in args), logw[:, half:],
+                           u, s1, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-4)

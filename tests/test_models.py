@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests (REDUCED configs, mandated): forward +
+one train step on CPU, shape + finiteness assertions; decode-vs-full
+consistency per family; analytic param count == real init."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MuxSpec
+from repro.configs import ARCHS, get_config, model_kind
+from repro.models import TransformerLM, EncDecLM, VLM, MuxBERT, bert_config
+from repro.models.config import param_count
+from repro.models.vlm import D_VISION
+from repro.optim import AdamW
+from repro.train.losses import causal_lm_loss
+
+KEY = jax.random.PRNGKey(0)
+B, L = 4, 16
+
+
+def make_inputs(cfg, kind, batch=B, length=L):
+    toks = jax.random.randint(KEY, (batch, length), 4, cfg.vocab_size)
+    if kind == "vlm":
+        return toks, jax.random.normal(
+            KEY, (batch, cfg.frontend_len, D_VISION))
+    if kind == "encdec":
+        enc = cfg.encoder
+        return toks, jax.random.normal(
+            KEY, (batch, enc.frontend_len, enc.d_model))
+    return toks, None
+
+
+def forward(params, cfg, kind, toks, extra, mux=MuxSpec()):
+    if kind == "vlm":
+        return VLM.apply(params, cfg, toks, extra, mux=mux,
+                         dtype=jnp.float32)
+    if kind == "encdec":
+        return EncDecLM.apply(params, cfg, toks, extra, mux=mux,
+                              dtype=jnp.float32)
+    return TransformerLM.apply(params, cfg, toks, mux=mux,
+                               dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    kind = model_kind(arch)
+    cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
+    mux = MuxSpec(n=2)
+    params = cls.init(KEY, cfg, mux)
+    toks, extra = make_inputs(cfg, kind)
+
+    out = forward(params, cfg, kind, toks, extra, mux)
+    expect_l = L + (cfg.frontend_len if kind == "vlm" else 0)
+    assert out["logits"].shape == (B, expect_l, cfg.vocab_size)
+    assert bool(jnp.isfinite(out["logits"]).all()), f"{arch}: non-finite"
+
+    # one real train step
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+
+    def loss_fn(p):
+        o = forward(p, cfg, kind, toks, extra, mux)
+        lg = o["logits"][:, -L:]
+        loss = causal_lm_loss(lg, toks)
+        if cfg.moe is not None:
+            loss = loss + 0.01 * o["aux"]
+        return loss
+
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(l0)), f"{arch}: loss not finite"
+    gnorm = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+    updates, opt_state, _ = opt.update(grads, opt_state, params)
+    params2 = opt.apply_updates(params, updates)
+    l1 = loss_fn(params2)
+    assert bool(jnp.isfinite(l1)), f"{arch}: post-step loss not finite"
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "h2o-danube-1.8b",
+                                  "recurrentgemma-9b", "rwkv6-7b",
+                                  "granite-moe-3b-a800m", "whisper-small"])
+def test_arch_decode_matches_full(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=cfg.moe.__class__(
+            **{**cfg.moe.__dict__, "capacity_factor": 16.0}))
+    kind = model_kind(arch)
+    cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
+    params = cls.init(KEY, cfg)
+    toks, extra = make_inputs(cfg, kind, batch=2, length=12)
+
+    full = forward(params, cfg, kind, toks, extra)["logits"]
+    cache = cls.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    if kind == "encdec":
+        pre = EncDecLM.apply(params, cfg, toks[:, :11], extra, cache=cache,
+                             dtype=jnp.float32)
+        dec = EncDecLM.apply(params, cfg, toks[:, 11:], cache=pre["cache"],
+                             q_offset=11, dtype=jnp.float32)
+    else:
+        pre = TransformerLM.apply(params, cfg, toks[:, :11], cache=cache,
+                                  dtype=jnp.float32)
+        dec = TransformerLM.apply(params, cfg, toks[:, 11:],
+                                  cache=pre["cache"], q_offset=11,
+                                  dtype=jnp.float32)
+    err = float(jnp.abs(dec["logits"][:, 0] - full[:, -1]).max())
+    assert err < 5e-3, f"{arch}: decode mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_init(arch):
+    cfg = get_config(arch, reduced=True)
+    kind = model_kind(arch)
+    if kind != "lm":
+        pytest.skip("analytic count covers the LM backbone")
+    params = TransformerLM.init(KEY, cfg)
+    actual = sum(x.size for x in jax.tree.leaves(params))
+    assert actual == param_count(cfg), \
+        f"{arch}: init={actual} analytic={param_count(cfg)}"
+
+
+def test_bert_heads():
+    cfg = bert_config("small", n_layers=2, vocab_size=128, max_seq_len=32)
+    mux = MuxSpec(n=2)
+    p = MuxBERT.init(KEY, cfg, mux, electra=True)
+    toks = jax.random.randint(KEY, (4, 16), 4, 128)
+    assert MuxBERT.mlm_logits(p, cfg, toks, mux=mux).shape == (4, 16, 128)
+    assert MuxBERT.rtd_logits(p, cfg, toks, mux=mux).shape == (4, 16)
+    head = MuxBERT.init_classifier(KEY, cfg, 5)
+    assert MuxBERT.classify(p, head, cfg, toks, mux=mux).shape == (4, 5)
+    thead = MuxBERT.init_token_classifier(KEY, cfg, 7)
+    assert MuxBERT.classify_tokens(p, thead, cfg, toks,
+                                   mux=mux).shape == (4, 16, 7)
+
+
+def test_mux_throughput_flops_scale():
+    """The core efficiency claim at the flop level: backbone tokens are
+    divided by N (mux'd batch is B/N)."""
+    cfg = get_config("gemma-2b", reduced=True)
+    from repro.models.blocks import apply_block, init_block
+    # measured indirectly: combine output batch dim
+    from repro.core import MuxEngine
+    for n in (2, 5):
+        spec = MuxSpec(n=n)
+        eng = MuxEngine.init(KEY, spec, cfg.d_model)
+        x = jnp.zeros((n * 2, 8, cfg.d_model))
+        assert MuxEngine.combine(eng, spec, x).shape[0] == 2

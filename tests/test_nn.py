@@ -1,0 +1,103 @@
+"""nn substrate: attention equivalences, rope, norms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import LayerNorm, RMSNorm, Linear
+from repro.nn.attention import (attention_core, chunked_attention_core,
+                                make_attention_mask)
+from repro.nn.rope import rope_frequencies, apply_rope
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(shape, k=0, scale=1.0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape) * scale
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 7),
+                                           (False, None)])
+def test_chunked_matches_naive(h, hkv, causal, window):
+    b, lq, dh = 2, 33, 16
+    q = rand((b, lq, h, dh), 1)
+    k = rand((b, lq, hkv, dh), 2)
+    v = rand((b, lq, hkv, dh), 3)
+    mask = make_attention_mask(jnp.arange(lq), jnp.arange(lq),
+                               causal=causal, window=window)[None]
+    want = attention_core(q, k, v, mask=mask)
+    got = chunked_attention_core(q, k, v, causal=causal, window=window,
+                                 chunk_size=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5)
+
+
+def test_chunked_q_offset_decode_suffix():
+    """Chunked attention with q_offset must equal the suffix of the full
+    computation (continuation batches)."""
+    b, l, h, dh = 1, 24, 2, 8
+    q = rand((b, l, h, dh), 1)
+    k = rand((b, l, h, dh), 2)
+    v = rand((b, l, h, dh), 3)
+    full = chunked_attention_core(q, k, v, causal=True, chunk_size=8)
+    tail = chunked_attention_core(q[:, -4:], k, v, causal=True,
+                                  q_offset=l - 4, chunk_size=8)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, -4:]),
+                               atol=2e-5)
+
+
+def test_softcap():
+    b, l, h, dh = 1, 9, 2, 8
+    q, k, v = rand((b, l, h, dh), 1), rand((b, l, h, dh), 2), \
+        rand((b, l, h, dh), 3)
+    m = make_attention_mask(jnp.arange(l), jnp.arange(l))[None]
+    a = attention_core(q, k, v, mask=m, logit_softcap=5.0)
+    c = chunked_attention_core(q, k, v, causal=True, chunk_size=4,
+                               logit_softcap=5.0)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a), atol=2e-5)
+
+
+def test_fully_masked_rows_no_nan():
+    """Sliding window + short positions can fully mask a row: no NaNs."""
+    b, l, h, dh = 1, 8, 1, 4
+    q, k, v = rand((b, l, h, dh)), rand((b, l, h, dh)), rand((b, l, h, dh))
+    # kv_valid all False => fully masked
+    mask = jnp.zeros((1, l, l), bool)
+    out = attention_core(q, k, v, mask=mask)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_rope_rotation_property():
+    """RoPE: relative positions — <R(p)q, R(p+k)k> depends only on k."""
+    dh = 16
+    q = rand((1, 1, 1, dh), 5)
+    k = rand((1, 1, 1, dh), 6)
+    def dot_at(p):
+        sin_q, cos_q = rope_frequencies(dh, jnp.array([p]))
+        sin_k, cos_k = rope_frequencies(dh, jnp.array([p + 3]))
+        qr = apply_rope(q, sin_q[None], cos_q[None])
+        kr = apply_rope(k, sin_k[None], cos_k[None])
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(0) - dot_at(11)) < 1e-4
+
+
+def test_norms():
+    x = rand((4, 32), 7) * 3 + 1
+    ln = LayerNorm.apply(LayerNorm.init(None, 32), x)
+    np.testing.assert_allclose(np.asarray(ln.mean(-1)), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ln.std(-1)), 1, atol=1e-2)
+    rms = RMSNorm.apply(RMSNorm.init(None, 32), x)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sqrt(jnp.mean(rms ** 2, -1))), 1, atol=1e-2)
+
+
+def test_linear_fused_projection():
+    p = Linear.init(KEY, 8, (2, 3, 4))
+    x = rand((5, 8))
+    y = Linear.apply(p, x)
+    assert y.shape == (5, 2, 3, 4)
+    # matches flat matmul
+    yf = x @ p["w"].reshape(8, -1) + p["b"].reshape(-1)
+    np.testing.assert_allclose(np.asarray(y.reshape(5, -1)),
+                               np.asarray(yf), atol=1e-5)

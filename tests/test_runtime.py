@@ -1,0 +1,130 @@
+"""Runtime: sharding rules (incl. stacked scan params + divisibility
+fallback), elastic planning, straggler detection, supervisor restarts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import spec_for_param, cache_specs, data_axes
+from repro.runtime.elastic import plan_elastic
+from repro.runtime.fault_tolerance import (Supervisor, StragglerDetector,
+                                           DeviceFailure)
+from repro.checkpoint import AsyncCheckpointManager
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by the rules."""
+    def __init__(self, **axes):
+        self.shape = axes
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+@pytest.mark.parametrize("path,shape,want", [
+    # column-parallel: shard output features
+    ("periods/0/ffn/up/w", (18, 2048, 16384), P(None, None, "model")),
+    ("periods/0/ffn/down/w", (18, 16384, 2048), P(None, "model", None)),
+    # attention: head axis when divisible, else head_dim, else replicate
+    ("periods/0/wq/w", (28, 1536, 16, 128), P(None, None, "model", None)),
+    ("periods/0/wq/w", (18, 2048, 8, 256), P(None, None, None, "model")),
+    ("periods/0/wk/w", (24, 2560, 8, 80), P(None, None, None, "model")),
+    # granite: 24 heads, hd=64: heads no, hd=64 yes
+    ("periods/0/wq/w", (32, 1536, 24, 64), P(None, None, None, "model")),
+    # embeddings: vocab when divisible
+    ("embed/table", (256000, 3072), P("model", None)),
+    ("embed/table", (49155, 1536), P(None, "model")),    # 49155 % 16 != 0
+    ("embed/table", (49155, 1537), P()),                 # nothing fits
+    # MoE expert-stacked: E first
+    ("periods/0/ffn/w_up", (32, 40, 1536, 512), P(None, None, None, "model")),
+    ("periods/0/ffn/w_up", (24, 64, 2048, 1408), P(None, "model", None, None)),
+    # stacked dim itself never model-sharded
+    ("periods/0/ln1/scale", (32, 1536), P()),
+    # 1-D replicated
+    ("final_norm/scale", (4096,), P()),
+])
+def test_spec_rules(path, shape, want):
+    assert spec_for_param(path, shape, MESH) == want
+
+
+def test_spec_rules_model_absent():
+    mesh = FakeMesh(data=8)
+    assert spec_for_param("periods/0/ffn/up/w", (4, 64, 256), mesh) == P()
+
+
+def test_cache_specs():
+    mesh = FakeMesh(data=16, model=16)
+    cache = {
+        "periods": [{"k": jnp.zeros((28, 128, 1024, 16, 64)),
+                     "pos": jnp.zeros((28, 1024)),
+                     "idx": jnp.zeros((28,))}],
+        "tail": [{"s": jnp.zeros((1, 64, 64, 64)),
+                  "shift_tm": jnp.zeros((1, 4096))}],
+    }
+    specs = cache_specs(cache, mesh)
+    assert specs["periods"][0]["k"] == P(None, ("data",), None, "model",
+                                         None)
+    assert specs["periods"][0]["pos"] == P(None, None)
+    # batch=1: no dp; H (dim1 of (B,H,hk,hv)) divisible -> model
+    assert specs["tail"][0]["s"] == P(None, "model", None, None)
+    assert specs["tail"][0]["shift_tm"] == P(None, "model")
+
+
+def test_elastic_plan():
+    p = plan_elastic(412, model_parallel=16, old_global_batch=256)
+    assert p.mesh_shape == (25, 16)
+    assert p.n_devices == 400 and p.dropped == 12
+    assert p.global_batch % 25 == 0
+    with pytest.raises(ValueError):
+        plan_elastic(8, model_parallel=16, old_global_batch=256)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(z_threshold=3.0, warmup_steps=5)
+    flagged = []
+    for i in range(50):
+        dt = 1.0 + 0.01 * np.random.default_rng(i).normal()
+        if i == 30:
+            dt = 5.0
+        if det.observe(i, dt):
+            flagged.append(i)
+    assert flagged == [30]
+    assert det.events[0]["step"] == 30
+
+
+def test_supervisor_restores_after_failure(tmp_path):
+    """Inject a device failure at step 7; the supervisor must restore the
+    step-5 checkpoint and finish all 12 steps."""
+    calls = {"n": 0}
+
+    def step_fn(state, batch, step):
+        return {"w": state["w"] + 1.0}, {"loss": float(step)}
+
+    failures = {"armed": True}
+
+    def fault_hook(step):
+        if step == 7 and failures["armed"]:
+            failures["armed"] = False
+            raise DeviceFailure("slice 3 lost")
+
+    mgr = AsyncCheckpointManager(str(tmp_path), keep_k=2)
+    sup = Supervisor(step_fn=step_fn, ckpt=mgr, checkpoint_every=5,
+                     max_restarts=2, fault_hook=fault_hook)
+    state = {"w": jnp.zeros(())}
+    state, hist = sup.run(state, iter(lambda: {"x": 0}, None), 12)
+    restarts = [h for h in hist if h.get("event") == "restart"]
+    assert len(restarts) == 1 and restarts[0]["at_step"] == 5
+    # 5 (restored) + 7 more steps = 12
+    assert float(state["w"]) == 12.0
+
+
+def test_supervisor_budget_exhausted(tmp_path):
+    def step_fn(state, batch, step):
+        raise DeviceFailure("always down")
+
+    mgr = AsyncCheckpointManager(str(tmp_path))
+    sup = Supervisor(step_fn=step_fn, ckpt=mgr, max_restarts=2,
+                     backoff_s=0.001)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        sup.run({"w": jnp.zeros(())}, iter(lambda: {}, None), 5)

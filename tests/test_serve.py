@@ -1,0 +1,79 @@
+"""Serving engine: prefill+decode == full forward (incl. mux'd decode),
+batcher packing & ensembling, greedy generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MuxSpec
+from repro.configs import get_config
+from repro.models import TransformerLM
+from repro.serve import (ServeConfig, init_cache, prefill, decode_step,
+                         greedy_generate, MuxBatcher, backbone_batch)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("mux_n", [1, 2])
+def test_serve_matches_full_forward(mux_n):
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    mux = MuxSpec(n=mux_n)
+    params = TransformerLM.init(KEY, cfg, mux)
+    sc = ServeConfig(cfg=cfg, kind="lm", mux=mux, capacity=32,
+                     dtype=jnp.float32)
+    toks = jax.random.randint(KEY, (4, 12), 4, cfg.vocab_size)
+    cache = init_cache(sc, 4)
+    lg_last, cache = prefill(params, sc, cache, toks[:, :11])
+    lg, cache = decode_step(params, sc, cache, toks[:, 11:], 11)
+    full = TransformerLM.apply(params, cfg, toks, mux=mux,
+                               dtype=jnp.float32)["logits"]
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lg_last),
+                               np.asarray(full[:, -2]), atol=2e-4)
+
+
+def test_multi_step_decode_consistency():
+    """Greedy generation: step k's logits == full forward over
+    prompt+generated-so-far."""
+    cfg = get_config("gemma-2b", reduced=True)
+    params = TransformerLM.init(KEY, cfg)
+    sc = ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(), capacity=32,
+                     dtype=jnp.float32)
+    prompt = jax.random.randint(KEY, (2, 6), 4, cfg.vocab_size)
+    gen = greedy_generate(params, sc, prompt, steps=4)
+    assert gen.shape == (2, 4)
+    # verify against teacher-forced full pass
+    seq = jnp.concatenate([prompt, gen], axis=1)
+    full = TransformerLM.apply(params, cfg, seq,
+                               dtype=jnp.float32)["logits"]
+    for t in range(4):
+        want = full[:, 5 + t].argmax(-1)
+        np.testing.assert_array_equal(np.asarray(gen[:, t]),
+                                      np.asarray(want))
+
+
+def test_backbone_batch():
+    assert backbone_batch(8, MuxSpec(n=2)) == 4
+    with pytest.raises(ValueError):
+        backbone_batch(9, MuxSpec(n=2))
+
+
+def test_batcher_full_load_no_duplicates():
+    b = MuxBatcher(n_mux=2, backbone_batch=2)
+    for i in range(6):
+        b.submit(f"p{i}")
+    slots, owners = b.next_batch()
+    assert [s.uid for s in slots] == [0, 1, 2, 3]
+    assert owners == [0, 1, 2, 3]
+    slots, owners = b.next_batch()
+    assert [s.uid for s in slots] == [4, 5, 4, 5]   # spare slots duplicated
+    assert owners == [0, 1, 0, 1]
+    assert b.next_batch() == (None, None)
+
+
+def test_batcher_ensembling_average():
+    lo = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [3.0, 0.0], [1.0, 0.0]])
+    ens = MuxBatcher.combine_logits(lo, [0, 1, 0, 1], 2)
+    np.testing.assert_allclose(np.asarray(ens),
+                               [[2.0, 0.0], [0.5, 0.5]])
