@@ -1,0 +1,15 @@
+# Reproducible entry points (ROADMAP.md tier-1 + smoke benchmarks).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke serve-smoke
+
+test:                      ## tier-1: full test suite
+	$(PY) -m pytest -x -q
+
+bench-smoke:               ## ring-vs-paged churn benchmark, tiny CPU budget
+	$(PY) -m benchmarks.serve_churn --smoke
+
+serve-smoke:               ## continuous paged serving end-to-end
+	$(PY) -m repro.launch.serve --continuous --cache paged \
+	    --requests 4 --new-tokens 4 --prompt-len 8 --block-size 4

@@ -27,11 +27,14 @@ def main():
     from benchmarks import (table1_throughput, table3_sizes,
                             table4_ensemble, table5_ablation,
                             fig4_pareto, fig5_muxology,
-                            table6_seeds, table12_retrieval_aux)
-    # opt-in extras (appendix tables): --only table6 table12
+                            table6_seeds, table12_retrieval_aux,
+                            serve_churn)
+    # opt-in extras (appendix tables + serve stack): --only table6 serve
     extras = {
         "table6": lambda: table6_seeds.run(budget),
         "table12": lambda: table12_retrieval_aux.run(budget),
+        "serve": lambda: serve_churn.run(
+            budget, n_requests=16 if args.full else 8),
     }
     suites = {
         "table1": lambda: table1_throughput.run(

@@ -1,7 +1,20 @@
-"""Serve a small model with batched multiplexed requests + load-adaptive
-ensembling (spare mux slots duplicate live requests, logits averaged).
+"""Serve a small model with batched multiplexed requests.
+
+Default: fill-drain batching + load-adaptive ensembling (spare mux
+slots duplicate live requests, logits averaged).
 
     PYTHONPATH=src python examples/serve_mux.py
+
+Continuous serving with the paged KV-cache pool (requests join and
+leave the decode loop every step; a joining mux group is prefilled into
+freshly allocated blocks, no sibling row is re-prefilled — DESIGN.md):
+
+    PYTHONPATH=src python examples/serve_mux.py --paged
+
+or any `repro.launch.serve` flags directly, e.g.
+
+    PYTHONPATH=src python examples/serve_mux.py --continuous \
+        --cache ring --requests 8       # grid re-prefill baseline
 """
 import sys
 
@@ -10,4 +23,10 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     argv = sys.argv[1:] or ["--arch", "gemma-2b", "--mux-n", "2",
                             "--requests", "6", "--new-tokens", "6"]
+    if "--paged" in argv:        # shorthand, composable with other flags
+        i = argv.index("--paged")
+        expansion = ["--continuous", "--cache", "paged"]
+        if "--block-size" not in argv:
+            expansion += ["--block-size", "4"]
+        argv = argv[:i] + expansion + argv[i + 1:]
     raise SystemExit(main(argv))

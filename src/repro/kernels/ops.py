@@ -14,6 +14,7 @@ from repro.kernels import demux_rsa as _demux
 from repro.kernels import flash_attention as _flash
 from repro.kernels import rwkv6 as _rwkv
 from repro.kernels import decode_attention as _dec
+from repro.kernels import paged_attention as _paged
 
 
 def _interpret() -> bool:
@@ -49,3 +50,9 @@ def rwkv6_chunked(r, k, v, logw, u, s0, **kw):
 def decode_attention(q, k_cache, v_cache, slot_pos, **kw):
     kw.setdefault("interpret", _interpret())
     return _dec.decode_attention(q, k_cache, v_cache, slot_pos, **kw)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _paged.paged_attention(q, k_pages, v_pages, block_tables,
+                                  page_pos, q_pos, **kw)

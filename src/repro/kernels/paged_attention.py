@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: paged flash-decode — single-query attention over a
+block-table-addressed KV pool (vLLM-style paged attention).
+
+Same math as ``kernels/decode_attention.py`` (online-softmax state in
+VMEM scratch across a sequential cache-block grid axis), but the cache
+is not contiguous per row: each batch row owns a *block table* of page
+ids into a shared ``(num_blocks, block_size, Hkv, Dh)`` pool.  The block
+table and per-row query positions are scalar-prefetched
+(``PrefetchScalarGridSpec``) so the page DMA for grid step (b, h, j) is
+issued directly against page ``bt[b, j]`` — the gather never
+materializes a contiguous copy of the row's cache in HBM.
+
+Differences from the contiguous kernel:
+  * ``q_pos`` is a per-row vector (continuous batching: rows sit at
+    different decode positions; -1 marks an inactive row whose output is
+    discarded by the caller);
+  * unallocated table entries (id -1) are clamped to page 0 for the DMA
+    and masked out via the prefetched table inside the kernel;
+  * slot validity comes from the pool's per-slot position map ((P, BS),
+    -1 = empty), the paged analogue of the ring's position vector.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, mb: int, window, causal: bool):
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, dh) grouped queries
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, dh) one page
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                               # (bs,) slot positions
+    dh = q.shape[-1]
+    q_pos = qp_ref[bi]
+
+    s = jnp.dot(q * dh ** -0.5, k.T)               # (G, bs)
+    mask = (pos >= 0) & (bt_ref[bi, ji] >= 0) & (q_pos >= 0)
+    if causal:
+        mask &= pos <= q_pos
+    if window is not None:
+        mask &= pos > q_pos - window
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ji == mb - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(
+            l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
+def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, *,
+                    window=None, causal: bool = True,
+                    interpret: bool = False):
+    """q: (B, 1, H, Dh); k_pages/v_pages: (P, BS, Hkv, Dh) shared pool;
+    block_tables: (B, MB) int32 page ids (-1 = unallocated);
+    page_pos: (P, BS) int32 absolute position per pool slot (-1 = empty);
+    q_pos: (B,) int32 per-row query position (-1 = inactive row).
+    Returns (B, 1, H, Dh)."""
+    b, _, h, dh = q.shape
+    bs, hkv = k_pages.shape[1], k_pages.shape[2]
+    g = h // hkv
+    mb = block_tables.shape[1]
+    block_tables = block_tables.astype(jnp.int32)
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+
+    qt = q.reshape(b, hkv, g, dh)                  # group queries per kv head
+    kt = k_pages.transpose(0, 2, 1, 3)             # (P, Hkv, BS, dh)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    def page_map(b_, h_, j, bt, qp):
+        return (jnp.maximum(bt[b_, j], 0), h_, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_tables, q_pos
+        grid=(b, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j, bt, qp: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), page_map),
+            pl.BlockSpec((1, 1, bs, dh), page_map),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h_, j, bt, qp: (jnp.maximum(bt[b_, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda b_, h_, j, bt, qp: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, mb=mb, window=window, causal=causal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_pos, qt, kt, vt, page_pos)
+    return out.reshape(b, 1, h, dh)

@@ -58,3 +58,27 @@ def decode_attention_ref(q, k_cache, v_cache, slot_pos, *, q_pos,
                                causal=causal, window=window,
                                kv_valid=slot_pos >= 0)[None]
     return attention_core(q, k_cache, v_cache, mask=mask)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, page_pos, q_pos,
+                        *, window=None, causal=True):
+    """Oracle for the paged decode kernel: gather each row's pages into a
+    contiguous cache, then naive attention with per-row position masks.
+
+    q: (B, 1, H, Dh); k_pages/v_pages: (P, BS, Hkv, Dh);
+    block_tables: (B, MB) int32 (-1 = unallocated);
+    page_pos: (P, BS) int32 absolute slot positions (-1 = empty);
+    q_pos: (B,) int32 per-row query position (-1 = inactive row).
+    """
+    from repro.nn.attention import attention_core, make_attention_mask
+    bt = jnp.asarray(block_tables)
+    b = bt.shape[0]
+    btc = jnp.maximum(bt, 0)
+    k = k_pages[btc].reshape(b, -1, *k_pages.shape[2:])      # (B, MB*BS, H, D)
+    v = v_pages[btc].reshape(b, -1, *v_pages.shape[2:])
+    pos = jnp.where(bt[..., None] >= 0, page_pos[btc], -1).reshape(b, -1)
+    q_pos = jnp.asarray(q_pos)
+    mask = make_attention_mask(q_pos[:, None], pos, causal=causal,
+                               window=window, kv_valid=pos >= 0)
+    mask &= (q_pos >= 0)[:, None, None]
+    return attention_core(q, k, v, mask=mask)

@@ -1,15 +1,26 @@
-"""Serving launcher: batched multiplexed inference with the MuxBatcher.
+"""Serving launcher: batched multiplexed inference.
 
-Feeds a stream of synthetic requests through prefill + decode with mux
-slots; under light load spare slots duplicate live requests and the
-averaged logits implement the paper's ensembling mode.
+Two modes (DESIGN.md):
 
-    python -m repro.launch.serve --arch qwen2-1.5b --reduced --mux-n 2 \
+  * fill-drain (default): ``MuxBatcher`` packs requests into the
+    N_mux × B grid; spare slots duplicate live requests and the averaged
+    logits implement the paper's ensembling mode.
+  * continuous (``--continuous``): ``ContinuousScheduler`` admits and
+    retires requests every decode step.  ``--cache ring`` re-prefills
+    the whole grid whenever the composition changes (the ring layout's
+    shared position vector allows nothing finer); ``--cache paged``
+    prefills ONLY the joining row into freshly allocated KV blocks
+    (``serve.kvpool``) and frees them on retire.
+
+    python -m repro.launch.serve --arch qwen2-1.5b --mux-n 2 \
         --requests 8 --new-tokens 8
+    python -m repro.launch.serve --arch qwen2-1.5b --continuous \
+        --cache paged --requests 8 --new-tokens 8
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -20,32 +31,208 @@ from repro.core import MuxSpec
 from repro.configs import get_config, model_kind
 from repro.models import TransformerLM, VLM, EncDecLM
 from repro.serve import (ServeConfig, init_cache, prefill, decode_step,
-                         MuxBatcher)
+                         MuxBatcher, Request, make_pool, set_block_tables,
+                         reset_blocks, PoolExhausted)
+from repro.serve.scheduler import ContinuousScheduler, StreamSlot
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--mux-n", type=int, default=2)
-    ap.add_argument("--backbone-batch", type=int, default=2)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
+                   *, pad_id: int = 0, on_prefill=None):
+    """Continuous-batching serve loop for both cache layouts.
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    kind = model_kind(args.arch)
-    mux = MuxSpec(n=args.mux_n)
-    key = jax.random.PRNGKey(args.seed)
-    cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
-    params = cls.init(key, cfg, mux)
-    sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
-                     capacity=args.prompt_len + args.new_tokens + 8,
-                     dtype=jnp.float32)
+    arrivals: iterable of (step, prompt_tokens, max_new), sorted by step.
+    Each loop iteration admits what it can, then runs one decode step
+    over the grid.  Returns a stats dict (completed requests, prefill
+    backbone-token counts, utilization samples, wall time).
 
-    batcher = MuxBatcher(n_mux=mux.n, backbone_batch=args.backbone_batch)
+    ring:  admission re-prefills the WHOLE grid from every row's current
+           tokens (the shared slot-position vector makes positions
+           uniform across rows, so one row cannot be rebuilt alone);
+           rows whose true sequence is shorter than the padded grid
+           length are position-padded (approximate — DESIGN.md).
+    paged: admission prefills only the joining rows (one backbone call
+           per new mux group, ``prefill(..., rows=[j])``); sibling rows'
+           blocks are untouched, drained rows free their blocks.
+    """
+    if sc.kind != "lm":
+        raise NotImplementedError(
+            "continuous serving supports decoder-only LM families")
+    n_mux = max(sc.mux.n, 1)
+    nrows = backbone_rows
+    nb_inst = n_mux * nrows
+    paged = sc.cache_layout == "paged"
+    sched = ContinuousScheduler(n_mux=n_mux, backbone_batch=nrows,
+                                max_len=sc.capacity)
+    arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
+    uid = 0
+    stats = {"prefill_tokens": 0, "prefill_events": 0, "decode_steps": 0,
+             "prefill_log": [], "slot_util": [], "cache_util": [],
+             "completed": sched.completed}
+    next_tok = np.zeros((n_mux, nrows), np.int64)
+    if paged:
+        pool = make_pool(sc, nb_inst)
+        cache = init_cache(sc, nb_inst)
+        row_len = {}
+        stats["pool"] = pool
+    else:
+        cache, grid_pos = None, 0
+
+    def _clear_dead_slots():
+        for i in range(n_mux):
+            for j in range(nrows):
+                if sched.slots[j][i].request is None:
+                    next_tok[i, j] = pad_id
+
+    def _free_drained_rows():
+        for j in list(row_len):
+            if not sched.row_active(j):
+                pool.free(j)
+                del row_len[j]
+
+    step = 0
+    t0 = time.time()
+    while arrivals or sched.queue or sched.n_active:
+        while arrivals and arrivals[0][0] <= step:
+            _, prompt, max_new = arrivals.popleft()
+            sched.submit(Request(uid=uid, prompt=list(prompt),
+                                 max_new=max_new))
+            uid += 1
+
+        # -- admission ---------------------------------------------------
+        if paged:
+            for j, placed in sched.admit_paged():
+                prompts = sched.row_prompts(j, pad_id)          # (N, L)
+                l_pad = prompts.shape[1]
+                try:
+                    blocks = pool.allocate(j, l_pad)
+                except PoolExhausted:
+                    # backpressure: un-place this group and retry once
+                    # blocks free up; later groups still get their shot
+                    for i, r in reversed(placed):
+                        sched.slots[j][i] = StreamSlot()
+                        sched.queue.appendleft(r)
+                    if pool.n_used_blocks == 0:
+                        raise PoolExhausted(
+                            f"request group of {l_pad} tokens cannot fit "
+                            f"an empty pool (num_blocks="
+                            f"{pool.num_blocks}, block_size="
+                            f"{pool.block_size}, per-seq cap "
+                            f"{pool.max_blocks_per_seq})")
+                    continue
+                row_len[j] = l_pad
+                cache = reset_blocks(cache, blocks)
+                cache = set_block_tables(cache,
+                                         pool.table_array(range(nrows)))
+                logits, cache = prefill(params, sc, cache,
+                                        jnp.asarray(prompts), rows=[j])
+                stats["prefill_tokens"] += l_pad                # backbone rows=1
+                stats["prefill_events"] += 1
+                stats["prefill_log"].append(((j,), l_pad))
+                if on_prefill is not None:
+                    on_prefill((j,), l_pad)
+                toks = np.asarray(logits.argmax(-1))            # (N,)
+                sched.record_row_tokens(j, toks)
+                next_tok[:, j] = toks
+            _free_drained_rows()
+        elif sched.admit() or (sched.n_active
+                               and grid_pos >= sc.capacity):
+            # ring: any composition change -> grid-wide re-prefill of
+            # every row's prompt + generated tokens, padded to a common
+            # length; this *is* the cost the paged layout removes.  The
+            # same rebuild fires when the physical write position reaches
+            # capacity: padding gaps let grid_pos outrun the logical
+            # lengths, and re-prefilling compacts positions before the
+            # ring would wrap over live context.  (Live lengths are
+            # < capacity — record_tokens retires at max_len — so each
+            # rebuild strictly lowers grid_pos: progress is guaranteed.)
+            grids = [sched.row_prompts(j, pad_id) for j in range(nrows)]
+            l_pad = max(g.shape[1] for g in grids)
+            arr = np.full((n_mux, nrows, l_pad), pad_id, np.int32)
+            for j, g in enumerate(grids):
+                arr[:, j, :g.shape[1]] = g
+            cache = init_cache(sc, nb_inst)
+            logits, cache = prefill(params, sc, cache,
+                                    jnp.asarray(arr.reshape(nb_inst, l_pad)))
+            grid_pos = l_pad
+            stats["prefill_tokens"] += l_pad * nrows
+            stats["prefill_events"] += 1
+            stats["prefill_log"].append((tuple(range(nrows)), l_pad * nrows))
+            if on_prefill is not None:
+                on_prefill(tuple(range(nrows)), l_pad * nrows)
+            toks = np.asarray(logits.argmax(-1))                # (NB,)
+            sched.record_tokens(toks)
+            next_tok = toks.reshape(n_mux, nrows).copy()
+
+        # -- one decode step over the grid -------------------------------
+        if sched.n_active:
+            _clear_dead_slots()
+            if paged:
+                pos_vec = np.full((nrows,), -1, np.int64)
+                fresh, preempt = [], []
+                for j in list(row_len):
+                    try:
+                        fresh += pool.append(j)     # reserve the new slot
+                    except PoolExhausted:
+                        preempt.append(j)
+                        continue
+                    pos_vec[j] = row_len[j]
+                # a row that outgrows the pool while it is the SOLE user
+                # can never be served (requeueing would thrash forever);
+                # with siblings, preempted rows simply retry after drains
+                if preempt and len(row_len) == 1:
+                    raise PoolExhausted(
+                        "a single row outgrew the whole pool "
+                        f"(num_blocks={pool.num_blocks}, block_size="
+                        f"{pool.block_size}) — it can never be served")
+                for j in preempt:
+                    # preempt the row: requeue its live requests (their
+                    # prompt + generated-so-far is re-prefilled on
+                    # re-admission) and return its blocks
+                    for i in reversed(range(n_mux)):
+                        s = sched.slots[j][i]
+                        if s.request is not None:
+                            sched.queue.appendleft(s.request)
+                        sched.slots[j][i] = StreamSlot()
+                    pool.free(j)
+                    del row_len[j]
+                if fresh:
+                    cache = reset_blocks(cache, fresh)
+                if fresh or preempt:
+                    cache = set_block_tables(
+                        cache, pool.table_array(range(nrows)))
+                if not row_len:
+                    step += 1
+                    continue                        # everyone preempted
+                pos = jnp.asarray(pos_vec)
+            else:
+                pos = grid_pos
+            toks_in = jnp.asarray(next_tok.reshape(-1))[:, None]
+            logits, cache = decode_step(params, sc, cache, toks_in, pos)
+            out = np.asarray(logits[:, 0].argmax(-1))
+            sched.record_tokens(out)
+            next_tok = out.reshape(n_mux, nrows).copy()
+            stats["decode_steps"] += 1
+            stats["slot_util"].append(sched.utilization())
+            if paged:
+                for j in row_len:
+                    row_len[j] += 1
+                _free_drained_rows()
+                stats["cache_util"].append(pool.utilization())
+            else:
+                grid_pos += 1
+                stats["max_grid_pos"] = max(
+                    stats.get("max_grid_pos", 0), grid_pos)
+                stats["cache_util"].append(
+                    min(grid_pos, sc.capacity) / sc.capacity
+                    if sched.n_active else 0.0)
+        step += 1
+    stats["wall"] = time.time() - t0
+    stats["generated_tokens"] = sum(len(r.output) for r in sched.completed)
+    return stats
+
+
+def _fill_drain(params, sc, cfg, kind, args):
+    batcher = MuxBatcher(n_mux=sc.mux.n, backbone_batch=args.backbone_batch)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         batcher.submit(rng.integers(
@@ -87,9 +274,65 @@ def main(argv=None):
             s.done = True
     dt = time.time() - t0
     print(f"served {served} requests x {args.new_tokens} tokens in "
-          f"{dt:.1f}s  (mux N={mux.n}, backbone batch "
+          f"{dt:.1f}s  (mux N={sc.mux.n}, backbone batch "
           f"{args.backbone_batch}; throughput "
           f"{served * args.new_tokens / dt:.1f} tok/s)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--mux-n", type=int, default=2)
+    ap.add_argument("--backbone-batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (requests join/leave every "
+                         "step) instead of fill-drain")
+    ap.add_argument("--cache", choices=("ring", "paged"), default="ring",
+                    help="KV-cache layout for --continuous")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: tokens per KV block")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="continuous: one request arrives every K steps")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    kind = model_kind(args.arch)
+    mux = MuxSpec(n=args.mux_n)
+    key = jax.random.PRNGKey(args.seed)
+    cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
+    params = cls.init(key, cfg, mux)
+    sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
+                     capacity=args.prompt_len + args.new_tokens + 8,
+                     dtype=jnp.float32,
+                     cache_layout=args.cache if args.continuous else "ring",
+                     block_size=args.block_size)
+
+    if not args.continuous:
+        _fill_drain(params, sc, cfg, kind, args)
+        return 0
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = [
+        (i * args.arrival_every,
+         rng.integers(4, cfg.vocab_size,
+                      size=(args.prompt_len,)).astype(np.int32),
+         args.new_tokens)
+        for i in range(args.requests)]
+    stats = run_continuous(params, sc, args.backbone_batch, arrivals)
+    done = len(stats["completed"])
+    util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
+    print(f"continuous[{sc.cache_layout}] served {done} requests "
+          f"({stats['generated_tokens']} tokens) in {stats['wall']:.1f}s  "
+          f"(mux N={mux.n}, rows {args.backbone_batch}; "
+          f"{stats['generated_tokens'] / stats['wall']:.1f} tok/s, "
+          f"prefill {stats['prefill_tokens']} backbone tokens in "
+          f"{stats['prefill_events']} events, slot util {util:.2f})")
     return 0
 
 

@@ -341,6 +341,28 @@ def init_kv_cache(cfg, batch: int, capacity: int, dtype):
     }
 
 
+def init_paged_kv_cache(cfg, batch: int, num_blocks: int, block_size: int,
+                        max_blocks: int, dtype):
+    """Paged layout (DESIGN.md): a shared block pool per layer plus a
+    per-row block table.  The table rows are driven by the host-side
+    ``serve.kvpool.KVPool`` allocator via ``serve.set_block_tables``."""
+    from repro.serve import kvpool
+    c = kvpool.init_pages(num_blocks, block_size, cfg.n_kv_heads,
+                          cfg.head_dim, dtype)
+    c["bt"] = jnp.full((batch, max_blocks), -1, jnp.int32)
+    return c
+
+
+def _paged_positions(ctx, batch: int, l: int):
+    """Per-row absolute positions (B, L) from ctx['q_offset'] (scalar or
+    (B,) vector; -1 marks an inactive row -> all positions invalid)."""
+    qo = jnp.asarray(ctx.get("q_offset", 0))
+    if qo.ndim == 0:
+        qo = jnp.full((batch,), qo)
+    pos = qo[:, None] + jnp.arange(l)[None]
+    return jnp.where(qo[:, None] < 0, -1, pos)
+
+
 def _cache_write(cache, k, v, q_offset):
     """Write L new entries at absolute positions q_offset..q_offset+L-1,
     ring-buffered modulo capacity.  Works for prefill (L>1) and decode."""
@@ -371,15 +393,35 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
         k = apply_rope(k, ctx["sin"], ctx["cos"])
 
     q_offset = ctx.get("q_offset", 0)
+    paged = bool(cache) and "bt" in cache
     if cache and l == 1:
         # decode: attend over the cache (current token already written)
-        cache = _cache_write(cache, k, v, q_offset)
-        if ctx.get("use_kernels") and cfg.logit_softcap is None:
+        if paged:
+            from repro.serve.kvpool import paged_write, paged_view
+            posm = _paged_positions(ctx, b, l)                  # (B, 1)
+            cache = paged_write(cache, k, v, posm)
+            if ctx.get("use_kernels") and cfg.logit_softcap is None:
+                from repro.kernels import ops as kops
+                o = kops.paged_attention(
+                    q, cache["kp"], cache["vp"], cache["bt"],
+                    cache["ppos"], posm[:, 0], window=window,
+                    causal=cfg.causal)
+            else:
+                kc, vc, kvpos = paged_view(cache)
+                mask = make_attention_mask(
+                    posm, kvpos, causal=cfg.causal, window=window,
+                    kv_valid=kvpos >= 0)
+                mask &= (posm >= 0)[..., None]        # inactive rows
+                o = attention_core(q, kc, vc, mask=mask,
+                                   logit_softcap=cfg.logit_softcap)
+        elif ctx.get("use_kernels") and cfg.logit_softcap is None:
+            cache = _cache_write(cache, k, v, q_offset)
             from repro.kernels import ops as kops
             o = kops.decode_attention(
                 q, cache["k"], cache["v"], cache["pos"],
                 q_pos=q_offset, window=window, causal=cfg.causal)
         else:
+            cache = _cache_write(cache, k, v, q_offset)
             q_pos = q_offset + jnp.arange(l)
             mask = make_attention_mask(
                 q_pos, cache["pos"], causal=cfg.causal, window=window,
@@ -387,7 +429,17 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
             o = attention_core(q, cache["k"], cache["v"], mask=mask,
                                logit_softcap=cfg.logit_softcap)
     else:
-        if cache:
+        if paged:
+            # paged prefill: scatter the joining rows' K/V into their
+            # freshly allocated blocks (ctx['rows'] selects the block-table
+            # rows when prefilling a subset of the grid); attention still
+            # runs over the fresh K/V below.
+            from repro.serve.kvpool import paged_write
+            rows = ctx.get("rows")
+            bt = cache["bt"] if rows is None else cache["bt"][rows]
+            posm = _paged_positions(ctx, b, l)
+            cache = paged_write(cache, k, v, posm, block_tables=bt)
+        elif cache:
             # single-shot prefill: cache is write-only; attention runs over
             # the fresh K/V (correct for any window / capacity relation).
             cache = _cache_write(cache, k, v, q_offset)
@@ -801,7 +853,28 @@ def apply_block(p, cfg, blk: str, x, ctx, cache):
     return _APPLY[blk](p, cfg, blk, x, ctx, cache)
 
 
-def init_block_cache(cfg, blk: str, batch: int, capacity: int, dtype):
+def init_block_cache(cfg, blk: str, batch: int, capacity: int, dtype, *,
+                     layout: str = "ring", block_size: int = 16,
+                     num_blocks: int | None = None):
+    if layout not in ("ring", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
+    if layout == "paged":
+        if blk in ("attn", "local"):
+            # windowed layers keep full-capacity tables and mask with the
+            # window (simpler than per-layer pools; see DESIGN.md)
+            if num_blocks is None:
+                # pool sizing has a single source of truth:
+                # serve.engine.ServeConfig.pool_blocks — a second default
+                # here could drift and corrupt cross-row KV silently
+                raise ValueError("paged layout requires num_blocks "
+                                 "(see ServeConfig.pool_blocks)")
+            from repro.serve.kvpool import blocks_for
+            max_blocks = blocks_for(capacity, block_size)
+            return init_paged_kv_cache(cfg, batch, num_blocks, block_size,
+                                       max_blocks, dtype)
+        if blk == "xattn":
+            raise NotImplementedError("paged layout: decoder-only families")
+        # recurrent state (rglru / rwkv) is O(1) per row — unchanged
     if blk == "attn":
         cap = capacity if cfg.window is None else min(capacity, cfg.window)
         return init_kv_cache(cfg, batch, cap, dtype)

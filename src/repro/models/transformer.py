@@ -64,12 +64,20 @@ class TransformerLM:
     # ----------------------------------------------------------------- cache
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, capacity: int,
-                   dtype=jnp.bfloat16):
-        """batch = backbone batch (already divided by mux N)."""
+                   dtype=jnp.bfloat16, *, layout: str = "ring",
+                   block_size: int = 16, num_blocks: int | None = None):
+        """batch = backbone batch (already divided by mux N).
+
+        layout='paged' replaces each attention layer's contiguous ring
+        buffer with a shared block pool + per-row block table (DESIGN.md);
+        tables are installed via ``serve.set_block_tables``.
+        """
         pat = cfg.block_pattern
 
         def one(blk):
-            return init_block_cache(cfg, blk, batch, capacity, dtype)
+            return init_block_cache(cfg, blk, batch, capacity, dtype,
+                                    layout=layout, block_size=block_size,
+                                    num_blocks=num_blocks)
 
         periods = tuple(
             jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -106,14 +114,24 @@ class TransformerLM:
         b, l, _ = x.shape
 
         # --- positions --------------------------------------------------
-        pos = q_offset + jnp.arange(l)
+        # q_offset: scalar, or a (B,) vector of per-row offsets (paged
+        # continuous serving — rows sit at different decode positions;
+        # -1 marks an inactive row, clamped to 0 for the embeddings and
+        # masked at the cache/attention level).
+        qo = jnp.asarray(q_offset)
+        if qo.ndim:
+            pos = jnp.maximum(qo, 0)[:, None] + jnp.arange(l)[None]  # (B, L)
+        else:
+            pos = qo + jnp.arange(l)
         ctx = {"sin": None, "cos": None, "q_offset": q_offset}
         if cfg.positions == "rope":
             sin, cos = rope_frequencies(cfg.head_dim, pos,
                                         theta=cfg.rope_theta)
-            ctx["sin"], ctx["cos"] = sin[None], cos[None]
+            ctx["sin"], ctx["cos"] = ((sin, cos) if qo.ndim
+                                      else (sin[None], cos[None]))
         elif cfg.positions == "learned":
-            x = x + params["pos_emb"].astype(dtype)[pos][None]
+            pe = params["pos_emb"].astype(dtype)[pos]
+            x = x + (pe if qo.ndim else pe[None])
         impl = cfg.attn_impl
         if impl == "auto":
             # long inputs (training or single-shot prefill) take the

@@ -1,5 +1,30 @@
+"""Serving stack (batcher → scheduler → engine → kernels; DESIGN.md).
+
+Fill-drain path: ``MuxBatcher`` packs requests into the N_mux × B grid
+(spare slots duplicate live requests — load-adaptive ensembling) and the
+engine runs prefill + decode over the whole batch.
+
+Continuous path: ``ContinuousScheduler`` admits and retires requests at
+every decode step.  With the paged cache layout (``KVPool`` block pool +
+per-row block tables + the Pallas paged decode-attention kernel) a
+joining request is prefilled into freshly allocated blocks without
+re-prefilling any occupied sibling row, and a retiring row returns its
+blocks to the pool:
+
+    sc = ServeConfig(..., cache_layout="paged", block_size=16)
+    pool = make_pool(sc, global_batch)
+    cache = init_cache(sc, global_batch)
+    blocks = pool.allocate(row, prompt_len)
+    cache = reset_blocks(cache, blocks)        # pool reuses freed blocks
+    cache = set_block_tables(cache, pool.table_array(range(B)))
+    logits, cache = prefill(params, sc, cache, row_tokens, rows=[row])
+    logits, cache = decode_step(params, sc, cache, toks, per_row_pos)
+
+``launch.serve --continuous --cache paged`` wires this end to end.
+"""
 from repro.serve.engine import (
     ServeConfig, init_cache, prefill, decode_step, greedy_generate,
-    backbone_batch,
+    backbone_batch, make_pool, set_block_tables, reset_blocks,
 )
 from repro.serve.batcher import MuxBatcher, Request
+from repro.serve.kvpool import KVPool, PoolError, PoolExhausted

@@ -7,6 +7,19 @@ holds B/N × L entries — cache bytes AND attention read-bandwidth per
 stream are divided by N.  ``decode_step`` signatures are uniform across
 families; the cache pytree encodes the family (KV ring buffer / RG-LRU
 state / RWKV6 matrix state / whisper cross-KV).
+
+Two cache layouts (see DESIGN.md):
+
+  * ``ring``  — one contiguous (B, capacity, Hkv, Dh) buffer per layer
+                with a shared slot-position vector; positions are uniform
+                across rows (fill-drain batches).
+  * ``paged`` — a shared block pool per layer addressed through per-row
+                block tables (``serve.kvpool``); rows decode at
+                independent positions (``decode_step`` takes a (B,) pos
+                vector) and ``prefill(..., rows=[j])`` writes a single
+                joining row's KV into freshly allocated blocks without
+                touching sibling rows — the basis of continuous mux
+                serving (``launch.serve --continuous --cache paged``).
 """
 from __future__ import annotations
 
@@ -19,6 +32,7 @@ import jax.numpy as jnp
 from repro.core import MuxSpec
 from repro.models import TransformerLM, EncDecLM, VLM
 from repro.models.config import ModelConfig
+from repro.serve.kvpool import KVPool, blocks_for
 
 
 def backbone_batch(global_batch: int, mux: MuxSpec) -> int:
@@ -34,18 +48,94 @@ class ServeConfig:
     mux: MuxSpec
     capacity: int              # KV capacity (max context)
     dtype: object = jnp.bfloat16
+    cache_layout: str = "ring"      # ring | paged
+    block_size: int = 16            # paged: tokens per block
+    num_blocks: int | None = None   # paged: pool size (default: worst case)
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return blocks_for(self.capacity, self.block_size)
+
+    def pool_blocks(self, global_batch: int) -> int:
+        """Pool size: explicit, or worst case (every row at capacity) +
+        the reserved trash block."""
+        if self.num_blocks is not None:
+            return self.num_blocks
+        b = backbone_batch(global_batch, self.mux)
+        return b * self.max_blocks_per_seq + 1
+
+
+def make_pool(sc: ServeConfig, global_batch: int) -> KVPool:
+    """Host-side allocator matching ``init_cache(sc, global_batch)``."""
+    return KVPool(num_blocks=sc.pool_blocks(global_batch),
+                  block_size=sc.block_size,
+                  max_blocks_per_seq=sc.max_blocks_per_seq)
 
 
 def init_cache(sc: ServeConfig, global_batch: int):
     b = backbone_batch(global_batch, sc.mux)
+    if sc.cache_layout == "paged":
+        if sc.kind != "lm":
+            raise NotImplementedError(
+                "paged cache layout: decoder-only LM families")
+        return TransformerLM.init_cache(
+            sc.cfg, b, sc.capacity, sc.dtype, layout="paged",
+            block_size=sc.block_size, num_blocks=sc.pool_blocks(global_batch))
     model = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[sc.kind]
     return model.init_cache(sc.cfg, b, sc.capacity, sc.dtype)
 
 
-def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None):
+def set_block_tables(cache, block_tables):
+    """Install a host (B, max_blocks_per_seq) block-table array into every
+    paged layer of a cache pytree (period-stacked layers broadcast over
+    the period axis).  Call after KVPool alloc/append/free changed any
+    row's table."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def upd(c):
+        if isinstance(c, dict) and "bt" in c:
+            return {**c, "bt": jnp.broadcast_to(bt, c["bt"].shape)}
+        return c
+
+    return {"periods": tuple(upd(c) for c in cache["periods"]),
+            "tail": tuple(upd(c) for c in cache["tail"])}
+
+
+def reset_blocks(cache, block_ids):
+    """Mark pool blocks as empty (position entries -1) in every paged
+    layer of a cache pytree.  MUST be called for blocks handed out by
+    ``KVPool.allocate``/``append`` before the first write: the pool
+    reuses freed blocks without clearing, and a reused block's stale
+    position entries would otherwise pass the attention validity mask
+    and leak a retired request's KV into the new owner."""
+    ids = jnp.asarray(list(block_ids), jnp.int32)
+    if ids.size == 0:
+        return cache
+
+    def upd(c):
+        if isinstance(c, dict) and "ppos" in c:
+            if c["ppos"].ndim == 3:        # period-stacked (P, NB, BS)
+                return {**c, "ppos": c["ppos"].at[:, ids].set(-1)}
+            return {**c, "ppos": c["ppos"].at[ids].set(-1)}
+        return c
+
+    return {"periods": tuple(upd(c) for c in cache["periods"]),
+            "tail": tuple(upd(c) for c in cache["tail"])}
+
+
+def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None,
+            rows=None):
     """tokens: (NB, L_prompt).  extra: patch/frame embeddings for
-    vlm/encdec.  Returns (last-position logits (NB, V), cache)."""
+    vlm/encdec.  Returns (last-position logits (NB, V), cache).
+
+    rows: paged layout only — backbone-row indices the (partial) batch
+    maps to; the joining rows' KV is scattered into their freshly
+    allocated blocks and no other row's cache is touched."""
     kw = dict(mux=sc.mux, cache=cache, dtype=sc.dtype)
+    if rows is not None:
+        if sc.cache_layout != "paged":
+            raise ValueError("rows= requires the paged cache layout")
+        kw["extra_ctx"] = {"rows": jnp.asarray(rows, jnp.int32)}
     if sc.kind == "vlm":
         out = VLM.apply(params, sc.cfg, tokens, extra, **kw)
     elif sc.kind == "encdec":
@@ -55,9 +145,10 @@ def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None):
     return out["logits"][:, -1], out["cache"]
 
 
-def decode_step(params, sc: ServeConfig, cache, tokens, pos: int):
-    """One decode step.  tokens: (NB, 1); pos: static int or traced scalar
-    offset of this token.  Returns (logits (NB, 1, V), new cache)."""
+def decode_step(params, sc: ServeConfig, cache, tokens, pos):
+    """One decode step.  tokens: (NB, 1); pos: static int, traced scalar,
+    or — paged layout — a (B,) int32 vector of per-row positions (-1 =
+    inactive row).  Returns (logits (NB, 1, V), new cache)."""
     kw = dict(mux=sc.mux, cache=cache, q_offset=pos, dtype=sc.dtype)
     if sc.kind == "encdec":
         out = EncDecLM.apply(params, sc.cfg, tokens, **kw)
@@ -71,8 +162,16 @@ def decode_step(params, sc: ServeConfig, cache, tokens, pos: int):
 def greedy_generate(params, sc: ServeConfig, prompt, *, steps: int,
                     extra=None):
     """Host-loop greedy decoding (tests/examples; production uses the
-    jitted decode_step inside the request loop)."""
+    jitted decode_step inside the request loop).  Works for both cache
+    layouts; under ``paged`` every row's blocks are allocated up front
+    from a fresh pool."""
     cache = init_cache(sc, prompt.shape[0])
+    if sc.cache_layout == "paged":
+        b = backbone_batch(prompt.shape[0], sc.mux)
+        pool = make_pool(sc, prompt.shape[0])
+        for j in range(b):
+            pool.allocate(j, prompt.shape[1] + steps)
+        cache = set_block_tables(cache, pool.table_array(range(b)))
     logits, cache = prefill(params, sc, cache, prompt, extra=extra)
     tok = logits.argmax(-1)[:, None]
     out = [tok]

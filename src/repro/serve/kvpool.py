@@ -1,0 +1,230 @@
+"""Paged KV-cache pool: fixed-size block allocator + device page ops.
+
+The pool replaces the per-row contiguous ring buffer with a shared set
+of fixed-size *blocks* (pages) of KV entries, vLLM-style:
+
+  * ``KVPool``     — host-side allocator (policy layer, numpy only, no
+                     jax): free list, per-client block tables,
+                     alloc / append / free.  A *client* is one backbone
+                     row of the serve grid — with mux N == 1 that is
+                     exactly one request stream; with N > 1 it is a mux
+                     group whose N streams share the row's muxed KV (see
+                     DESIGN.md for why muxed KV cannot be split finer).
+  * device helpers — a pytree of ``(num_blocks, block_size, Hkv, Dh)``
+                     pages per attention layer plus a per-slot absolute
+                     position array, with functional scatter-write and
+                     gather-view ops used by ``models.blocks`` and the
+                     pure-JAX reference attention path.
+
+Block id 0 is reserved as the *trash block*: writes for invalid
+positions (padding, inactive rows) are routed there and its position
+entries stay -1, so they are always masked out of attention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PoolError(RuntimeError):
+    """Misuse of the pool API (double alloc / double free / unknown client)."""
+
+
+class PoolExhausted(PoolError):
+    """No free blocks left (or a client hit its per-sequence block cap)."""
+
+
+TRASH_BLOCK = 0
+
+
+def blocks_for(num_tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``num_tokens`` entries."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    return -(-max(num_tokens, 0) // block_size)
+
+
+@dataclass
+class KVPool:
+    """Host-side block allocator with per-client block tables.
+
+    num_blocks includes the reserved trash block 0; allocatable capacity
+    is ``num_blocks - 1`` blocks.
+    """
+    num_blocks: int
+    block_size: int
+    max_blocks_per_seq: int
+    _free: list = field(init=False, repr=False)
+    _tables: dict = field(default_factory=dict, init=False, repr=False)
+    _lens: dict = field(default_factory=dict, init=False, repr=False)
+
+    def __post_init__(self):
+        if self.num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved)")
+        if self.block_size < 1 or self.max_blocks_per_seq < 1:
+            raise ValueError("block_size / max_blocks_per_seq must be >= 1")
+        # LIFO free list over ids 1..num_blocks-1 (0 = trash)
+        self._free = list(range(self.num_blocks - 1, 0, -1))
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used_blocks(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def has(self, cid) -> bool:
+        return cid in self._tables
+
+    def num_tokens(self, cid) -> int:
+        return self._lens[cid]
+
+    def used_tokens(self) -> int:
+        return sum(self._lens.values())
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pool slots holding live tokens."""
+        return self.used_tokens() / ((self.num_blocks - 1) * self.block_size)
+
+    # -- alloc / append / free --------------------------------------------
+    def _take(self, n: int):
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} blocks, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def allocate(self, cid, num_tokens: int = 0):
+        """Register client ``cid`` and reserve blocks for ``num_tokens``.
+        Returns the allocated block ids; blocks are reused WITHOUT
+        device-side clearing, so callers must reset their position
+        entries (``engine.reset_blocks``) before the first write."""
+        if cid in self._tables:
+            raise PoolError(f"client {cid!r} already allocated")
+        n = blocks_for(num_tokens, self.block_size)
+        if n > self.max_blocks_per_seq:
+            raise PoolExhausted(
+                f"{num_tokens} tokens exceed per-seq cap "
+                f"{self.max_blocks_per_seq * self.block_size}")
+        blocks = self._take(n)
+        self._tables[cid] = blocks
+        self._lens[cid] = num_tokens
+        return list(blocks)
+
+    def append(self, cid, n: int = 1) -> list:
+        """Grow client ``cid`` by ``n`` tokens, allocating blocks as
+        boundaries are crossed.  Returns the newly allocated block ids
+        ([] if the table did not grow) — callers must reset those
+        blocks' device-side position entries (``engine.reset_blocks``)
+        before writing, since freed blocks are reused without clearing."""
+        if cid not in self._tables:
+            raise PoolError(f"client {cid!r} not allocated")
+        new_len = self._lens[cid] + n
+        need = blocks_for(new_len, self.block_size)
+        if need > self.max_blocks_per_seq:
+            raise PoolExhausted(
+                f"client {cid!r}: {new_len} tokens exceed per-seq cap "
+                f"{self.max_blocks_per_seq * self.block_size}")
+        fresh = []
+        if need > len(self._tables[cid]):
+            fresh = self._take(need - len(self._tables[cid]))
+            self._tables[cid].extend(fresh)
+        self._lens[cid] = new_len
+        return fresh
+
+    def free(self, cid):
+        """Return all of ``cid``'s blocks to the free list."""
+        if cid not in self._tables:
+            raise PoolError(f"client {cid!r} not allocated (double free?)")
+        self._free.extend(reversed(self._tables.pop(cid)))
+        del self._lens[cid]
+
+    # -- block-table views -------------------------------------------------
+    def block_table(self, cid) -> np.ndarray:
+        """(max_blocks_per_seq,) int32, -1-padded."""
+        if cid not in self._tables:
+            raise PoolError(f"client {cid!r} not allocated")
+        bt = np.full((self.max_blocks_per_seq,), -1, np.int32)
+        blocks = self._tables[cid]
+        bt[:len(blocks)] = blocks
+        return bt
+
+    def table_array(self, clients) -> np.ndarray:
+        """Stack block tables for an ordered sequence of clients; entries
+        that are None or unallocated give all -1 rows.  Returns
+        (len(clients), max_blocks_per_seq) int32."""
+        out = np.full((len(clients), self.max_blocks_per_seq), -1, np.int32)
+        for i, cid in enumerate(clients):
+            if cid is not None and cid in self._tables:
+                out[i] = self.block_table(cid)
+        return out
+
+    def check_invariants(self):
+        """Debug/test hook: no block owned twice, free list disjoint."""
+        owned = [b for blks in self._tables.values() for b in blks]
+        assert len(owned) == len(set(owned)), "block owned by two clients"
+        assert not (set(owned) & set(self._free)), "owned block on free list"
+        assert TRASH_BLOCK not in owned and TRASH_BLOCK not in self._free
+        assert len(owned) + len(self._free) == self.num_blocks - 1
+        for cid, blks in self._tables.items():
+            assert len(blks) >= blocks_for(self._lens[cid], self.block_size)
+            assert len(blks) <= self.max_blocks_per_seq
+
+
+# ===========================================================================
+# device-side page ops (functional, jit-safe)
+# ===========================================================================
+
+def init_pages(num_blocks: int, block_size: int, n_kv_heads: int,
+               head_dim: int, dtype):
+    """Pages for ONE attention layer + the shared per-slot position map."""
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
+        "vp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
+        "ppos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+    }
+
+
+def paged_write(cache, k, v, positions, block_tables=None):
+    """Scatter L new KV entries per row into their pages.
+
+    cache: dict with kp/vp (P, BS, Hkv, Dh), ppos (P, BS) and (unless
+    ``block_tables`` overrides it) bt (B, MB).  k, v: (B, L, Hkv, Dh).
+    positions: (B, L) int32 absolute token positions; entries < 0 (pad
+    tokens, inactive rows) are routed to the trash block and stay masked.
+    Rows own disjoint blocks (allocator invariant), so scatters never
+    collide across rows.
+    """
+    bt = cache["bt"] if block_tables is None else block_tables
+    bs = cache["kp"].shape[1]
+    blk = positions // bs                                    # (B, L)
+    in_range = (positions >= 0) & (blk < bt.shape[1])
+    page = jnp.take_along_axis(bt, jnp.clip(blk, 0, bt.shape[1] - 1),
+                               axis=1)                       # (B, L)
+    valid = in_range & (page >= 0)
+    page = jnp.where(valid, page, TRASH_BLOCK)
+    slot = jnp.where(valid, positions % bs, 0)
+    stored = jnp.where(valid, positions, -1)
+    return {**cache,
+            "kp": cache["kp"].at[page, slot].set(k),
+            "vp": cache["vp"].at[page, slot].set(v),
+            "ppos": cache["ppos"].at[page, slot].set(stored)}
+
+
+def paged_view(cache):
+    """Gather each row's pages into a contiguous (B, MB*BS, Hkv, Dh) view
+    plus per-row slot positions (B, MB*BS) with -1 for empty/unallocated.
+    Used by the pure-JAX attention path and tests; the Pallas kernel
+    reads pages in place via the block table instead."""
+    bt = cache["bt"]
+    b, mb = bt.shape
+    btc = jnp.maximum(bt, 0)
+    k = cache["kp"][btc]                                     # (B, MB, BS, H, D)
+    v = cache["vp"][btc]
+    pos = jnp.where(bt[..., None] >= 0, cache["ppos"][btc], -1)
+    return (k.reshape(b, -1, *k.shape[3:]),
+            v.reshape(b, -1, *v.shape[3:]),
+            pos.reshape(b, -1))

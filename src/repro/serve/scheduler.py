@@ -7,11 +7,19 @@ slot immediately and a waiting request is prefilled into it, so the
 backbone step never idles while the queue is non-empty.
 
 The slot grid maps onto the muxed decode step: slot (i, j) is mux
-stream i of backbone row j.  Prefill of a joining request only has to
-produce that stream's KV contribution — with the shared-cache mux
-layout the whole backbone row's cache is re-prefilled from the row's
-current prompts (cheap at small N; the optimization of incremental
-per-stream cache writes is noted in DESIGN.md as future work).
+stream i of backbone row j.  Two admission policies (DESIGN.md §ring vs
+paged):
+
+  * ``admit``       — slot-level, for the ring cache layout: a joining
+    request may land in a partially occupied row, whose muxed KV then
+    has to be re-prefilled from the row's current prompts (mux combine
+    is nonlinear through the backbone, so a row's cache cannot be
+    patched per stream).
+  * ``admit_paged`` — row-level, for the paged cache layout: requests
+    are grouped into *empty* rows only, so a joining group is prefilled
+    exactly once into freshly allocated blocks and occupied sibling
+    rows are never re-prefilled; a drained row returns its blocks to
+    the ``serve.kvpool.KVPool``.
 
 This module is deliberately jit-free (policy layer); the compute calls
 go through ``serve.engine``.
@@ -73,6 +81,47 @@ class ContinuousScheduler:
             dirty_rows.add(j)
         return sorted(dirty_rows)
 
+    def admit_paged(self):
+        """Row-granular admission for the paged cache layout: queued
+        requests are grouped (up to N per row) into rows that are
+        entirely empty.  Occupied rows — including partially drained
+        ones — are NEVER touched, so admission requires no re-prefill of
+        sibling streams.  Returns [(row, [(slot, request), ...]), ...]
+        for the newly formed mux groups (each needs exactly one prefill
+        of its own prompts)."""
+        placements = []
+        for j in range(self.backbone_batch):
+            if not self.queue:
+                break
+            if any(s.request is not None for s in self.slots[j]):
+                continue
+            placed = []
+            for i in range(self.n_mux):
+                if not self.queue:
+                    break
+                r = self.queue.popleft()
+                self.slots[j][i] = StreamSlot(
+                    request=r, pos=len(r.prompt), prompt_len=len(r.prompt))
+                placed.append((i, r))
+            if placed:
+                # the group is prefilled from row_prompts (prompt plus any
+                # already-generated tokens — preempted requests re-enter
+                # here), right-padded to the longest sequence: every
+                # stream's position in the muxed row is that padded
+                # length.  Aligning pos keeps max_len retirement in
+                # lockstep with the row's PHYSICAL length, so a short
+                # stream cannot keep the row alive past the pool's
+                # per-sequence block cap.
+                l_pad = max(len(r.prompt) + len(r.output)
+                            for _, r in placed)
+                for i, _ in placed:
+                    self.slots[j][i].pos = l_pad
+                placements.append((j, placed))
+        return placements
+
+    def row_active(self, j: int) -> bool:
+        return any(s.request is not None for s in self.slots[j])
+
     def row_prompts(self, j: int, pad_id: int = 0):
         """Current token sequences of row j's N streams, right-padded to
         a common length (joining requests mid-flight carry their prompt +
@@ -89,6 +138,20 @@ class ContinuousScheduler:
             arr[i, :len(t)] = t
         return arr
 
+    def _record_slot(self, j: int, i: int, token) -> int:
+        s = self.slots[j][i]
+        if s.request is None:
+            return 0
+        s.request.output.append(int(token))
+        s.pos += 1
+        done = (len(s.request.output) >= s.request.max_new or
+                s.pos >= self.max_len)
+        if done:
+            s.request.done = True
+            self.completed.append(s.request)
+            self.slots[j][i] = StreamSlot()
+        return int(done)
+
     def record_tokens(self, tokens):
         """tokens: (N_mux * B,) next token per stream (mux-major order:
         stream i of row j at index i * B + j).  Retires finished
@@ -96,20 +159,17 @@ class ContinuousScheduler:
         retired = 0
         for i in range(self.n_mux):
             for j in range(self.backbone_batch):
-                s = self.slots[j][i]
-                if s.request is None:
-                    continue
-                s.request.output.append(int(tokens[i * self.backbone_batch + j]))
-                s.pos += 1
-                done = (len(s.request.output) >= s.request.max_new or
-                        s.pos >= self.max_len)
-                if done:
-                    s.request.done = True
-                    self.completed.append(s.request)
-                    self.slots[j][i] = StreamSlot()
-                    retired += 1
+                retired += self._record_slot(
+                    j, i, tokens[i * self.backbone_batch + j])
         self.steps += 1
         return retired
+
+    def record_row_tokens(self, j: int, tokens):
+        """tokens: (N_mux,) next token per stream of row j (e.g. the
+        first generated tokens produced by a row's prefill).  Retires
+        finished requests; returns number retired."""
+        return sum(self._record_slot(j, i, tokens[i])
+                   for i in range(self.n_mux))
 
     def utilization(self) -> float:
         return self.n_active / (self.n_mux * self.backbone_batch)

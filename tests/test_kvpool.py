@@ -1,0 +1,188 @@
+"""KVPool allocator: alloc/append/free lifecycle, exhaustion, block-table
+consistency under churn (property-tested when hypothesis is available),
+and the device-side paged write/gather ops."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kvpool import (KVPool, PoolError, PoolExhausted,
+                                TRASH_BLOCK, blocks_for, init_pages,
+                                paged_write, paged_view)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # property tests skip, the rest still run
+    from hypothesis_stub import given, settings, st
+
+
+def test_blocks_for():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+def test_alloc_free_roundtrip():
+    p = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    assert p.n_free_blocks == 8          # block 0 reserved
+    b0 = p.allocate("a", 10)             # 3 blocks
+    assert len(b0) == 3 and TRASH_BLOCK not in b0
+    assert p.num_tokens("a") == 10 and p.n_used_blocks == 3
+    bt = p.block_table("a")
+    assert bt.shape == (4,) and list(bt[:3]) == b0 and bt[3] == -1
+    p.free("a")
+    assert p.n_free_blocks == 8 and not p.has("a")
+    p.check_invariants()
+
+
+def test_append_grows_table_on_boundary():
+    p = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    p.allocate("a", 3)
+    assert p.append("a") == []           # 4 tokens, still 1 block
+    fresh = p.append("a")                # 5 tokens -> 2 blocks
+    assert len(fresh) == 1 and fresh[0] in p.block_table("a")
+    assert p.num_tokens("a") == 5 and len(p.block_table("a")) == 4
+    assert (p.block_table("a") >= 0).sum() == 2
+    p.check_invariants()
+
+
+def test_double_alloc_and_double_free_raise():
+    p = KVPool(num_blocks=5, block_size=4, max_blocks_per_seq=2)
+    p.allocate("a", 4)
+    with pytest.raises(PoolError):
+        p.allocate("a", 4)
+    p.free("a")
+    with pytest.raises(PoolError):
+        p.free("a")
+    with pytest.raises(PoolError):
+        p.append("ghost")
+
+
+def test_pool_exhaustion_raises():
+    p = KVPool(num_blocks=4, block_size=4, max_blocks_per_seq=3)
+    p.allocate("a", 8)                   # 2 of 3 blocks
+    with pytest.raises(PoolExhausted):
+        p.allocate("b", 8)               # needs 2, only 1 free
+    # failed alloc must not leak partial state
+    p.check_invariants()
+    assert not p.has("b") and p.n_free_blocks == 1
+
+
+def test_per_seq_cap_raises():
+    p = KVPool(num_blocks=32, block_size=4, max_blocks_per_seq=2)
+    with pytest.raises(PoolExhausted):
+        p.allocate("a", 9)               # 3 blocks > cap 2
+    p.allocate("b", 8)
+    with pytest.raises(PoolExhausted):
+        p.append("b")                    # 9 tokens > cap
+
+
+def test_table_array_ordering_and_missing_rows():
+    p = KVPool(num_blocks=9, block_size=2, max_blocks_per_seq=3)
+    p.allocate(1, 2)
+    arr = p.table_array([0, 1, None])
+    assert arr.shape == (3, 3)
+    assert (arr[0] == -1).all() and (arr[2] == -1).all()
+    assert arr[1, 0] >= 1 and (arr[1, 1:] == -1).all()
+
+
+def _churn(p, ops):
+    """Deterministic alloc/append/free churn driven by an op list."""
+    live = set()
+    for kind, cid, n in ops:
+        try:
+            if kind == 0 and cid not in live:
+                p.allocate(cid, n)
+                live.add(cid)
+            elif kind == 1 and cid in live:
+                p.append(cid, n)
+            elif kind == 2 and cid in live:
+                p.free(cid)
+                live.discard(cid)
+        except PoolExhausted:
+            pass                          # legal under churn; state intact
+        p.check_invariants()
+    return live
+
+
+def test_churn_deterministic():
+    rng = np.random.default_rng(0)
+    p = KVPool(num_blocks=17, block_size=4, max_blocks_per_seq=5)
+    ops = [(int(rng.integers(3)), int(rng.integers(6)),
+            int(rng.integers(1, 12))) for _ in range(300)]
+    live = _churn(p, ops)
+    assert p.used_tokens() == sum(p.num_tokens(c) for c in live)
+    assert 0.0 <= p.utilization() <= 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5),
+                          st.integers(1, 12)), max_size=120))
+def test_churn_property(ops):
+    """No double-ownership, free-list disjointness, per-seq caps — under
+    arbitrary alloc/append/free interleavings."""
+    _churn(KVPool(num_blocks=11, block_size=4, max_blocks_per_seq=4), ops)
+
+
+# -- device-side page ops ---------------------------------------------------
+
+def test_paged_write_and_view():
+    bs, hk, hd = 4, 2, 8
+    pool = KVPool(num_blocks=6, block_size=bs, max_blocks_per_seq=3)
+    pool.allocate(0, 6)
+    pool.allocate(1, 2)
+    cache = init_pages(6, bs, hk, hd, jnp.float32)
+    cache["bt"] = jnp.asarray(pool.table_array([0, 1]))
+    k = jnp.arange(2 * 6 * hk * hd, dtype=jnp.float32).reshape(2, 6, hk, hd)
+    v = -k
+    positions = jnp.asarray([[0, 1, 2, 3, 4, 5],       # row 0: 6 tokens
+                             [0, 1, -1, -1, -1, -1]])  # row 1: 2 + pads
+    cache = paged_write(cache, k, v, positions)
+    kc, vc, pos = paged_view(cache)
+    assert kc.shape == (2, 3 * bs, hk, hd)
+    np.testing.assert_array_equal(np.asarray(pos[0, :6]), np.arange(6))
+    assert (np.asarray(pos[0, 6:]) == -1).all()
+    np.testing.assert_array_equal(np.asarray(pos[1, :2]), [0, 1])
+    assert (np.asarray(pos[1, 2:]) == -1).all()
+    np.testing.assert_array_equal(np.asarray(kc[0, :6]), np.asarray(k[0]))
+    np.testing.assert_array_equal(np.asarray(vc[1, :2]), np.asarray(v[1, :2]))
+    # pad writes landed in the trash block, which stays masked
+    assert (np.asarray(cache["ppos"][TRASH_BLOCK]) == -1).all()
+
+
+def test_paged_write_routes_overflow_positions_to_trash():
+    """Positions beyond the block table (caller kept decoding without
+    growing the table) must NOT clip into the last allocated block."""
+    bs, hk, hd = 2, 1, 4
+    pool = KVPool(num_blocks=6, block_size=bs, max_blocks_per_seq=2)
+    pool.allocate(0, 4)                  # table full: 2 blocks = 4 slots
+    cache = init_pages(6, bs, hk, hd, jnp.float32)
+    cache["bt"] = jnp.asarray(pool.table_array([0]))
+    cache = paged_write(cache, jnp.ones((1, 4, hk, hd)),
+                        jnp.ones((1, 4, hk, hd)),
+                        jnp.arange(4)[None])
+    before = np.asarray(paged_view(cache)[0][0, :4]).copy()
+    # overflow write at position 4 (block index 2 > table width 2)
+    cache = paged_write(cache, jnp.full((1, 1, hk, hd), 9.0),
+                        jnp.full((1, 1, hk, hd), 9.0),
+                        jnp.asarray([[4]]))
+    kc, _, pos = paged_view(cache)
+    np.testing.assert_array_equal(np.asarray(kc[0, :4]), before)
+    np.testing.assert_array_equal(np.asarray(pos[0]), [0, 1, 2, 3])
+    assert (np.asarray(cache["ppos"][TRASH_BLOCK]) == -1).all()
+
+
+def test_paged_write_disjoint_rows_do_not_collide():
+    bs, hk, hd = 2, 1, 4
+    pool = KVPool(num_blocks=8, block_size=bs, max_blocks_per_seq=3)
+    for cid in (0, 1, 2):
+        pool.allocate(cid, 4)
+    cache = init_pages(8, bs, hk, hd, jnp.float32)
+    cache["bt"] = jnp.asarray(pool.table_array([0, 1, 2]))
+    k = jnp.stack([jnp.full((4, hk, hd), float(r + 1)) for r in range(3)])
+    positions = jnp.broadcast_to(jnp.arange(4)[None], (3, 4))
+    cache = paged_write(cache, k, -k, positions)
+    kc, _, pos = paged_view(cache)
+    for r in range(3):
+        np.testing.assert_array_equal(np.asarray(kc[r, :4]),
+                                      np.full((4, hk, hd), float(r + 1)))

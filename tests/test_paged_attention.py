@@ -1,0 +1,101 @@
+"""Paged decode-attention: Pallas kernel (interpret mode) vs the pure-JAX
+reference, and both vs the contiguous ``decode_attention`` kernel on an
+equivalent cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def build_pool(lens, *, num_blocks, block_size, max_blocks, hkv, dh, key):
+    """Allocate per-row blocks (block 0 = trash) and fill them with random
+    K/V; returns (k_pages, v_pages, block_tables, page_pos)."""
+    ks = jax.random.split(key, 2)
+    kp = jax.random.normal(ks[0], (num_blocks, block_size, hkv, dh))
+    vp = jax.random.normal(ks[1], (num_blocks, block_size, hkv, dh))
+    bt = np.full((len(lens), max_blocks), -1, np.int32)
+    ppos = np.full((num_blocks, block_size), -1, np.int32)
+    free = list(range(1, num_blocks))
+    for b, n in enumerate(lens):
+        if n < 0:
+            continue
+        nb = -(-n // block_size) if n else 0
+        blocks = [free.pop() for _ in range(nb)]
+        bt[b, :nb] = blocks
+        for t in range(n):
+            ppos[blocks[t // block_size], t % block_size] = t
+    return kp, vp, jnp.asarray(bt), jnp.asarray(ppos)
+
+
+@pytest.mark.parametrize("hkv,window", [(2, None), (2, 12), (8, None)])
+def test_paged_kernel_matches_ref(hkv, window):
+    B, H, DH, BS, MB, P = 3, 8, 16, 8, 6, 16
+    q = jax.random.normal(KEY, (B, 1, H, DH))
+    # heterogeneous rows, one inactive (-1)
+    lens = [37, 12, -1]
+    kp, vp, bt, ppos = build_pool(lens, num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=hkv, dh=DH,
+                                  key=jax.random.fold_in(KEY, hkv))
+    q_pos = jnp.asarray([36, 11, -1], jnp.int32)
+    got = ops.paged_attention(q, kp, vp, bt, ppos, q_pos,
+                              window=window, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ppos, q_pos,
+                                   window=window)
+    # inactive rows are fully masked; their output is caller-discarded
+    np.testing.assert_allclose(np.asarray(got)[:2], np.asarray(want)[:2],
+                               atol=3e-5, rtol=1e-4)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_paged_matches_contiguous_decode_attention(window):
+    """Rows laid out contiguously in the pool must reproduce the ring
+    kernel's output on the equivalent contiguous cache."""
+    B, H, HKV, DH, BS, MB = 2, 8, 2, 16, 8, 6
+    P = B * MB + 1
+    q = jax.random.normal(KEY, (B, 1, H, DH))
+    n, q_pos = 40, 39
+    kp, vp, bt, ppos = build_pool([n] * B, num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    got = ops.paged_attention(q, kp, vp, bt, ppos,
+                              jnp.full((B,), q_pos, jnp.int32),
+                              window=window, interpret=True)
+    # materialize each row's contiguous equivalent
+    kc = np.zeros((B, MB * BS, HKV, DH), np.float32)
+    vc = np.zeros_like(kc)
+    pos_c = np.full((MB * BS,), -1, np.int32)
+    btn, kpn, vpn = map(np.asarray, (bt, kp, vp))
+    for b in range(B):
+        for t in range(n):
+            pg = btn[b, t // BS]
+            kc[b, t] = kpn[pg, t % BS]
+            vc[b, t] = vpn[pg, t % BS]
+    pos_c[:n] = np.arange(n)
+    want = ops.decode_attention(q, jnp.asarray(kc), jnp.asarray(vc),
+                                jnp.asarray(pos_c), q_pos=q_pos,
+                                window=window, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_unallocated_table_entries_stay_masked():
+    """-1 table entries are clamped to page 0 for the gather/DMA; even a
+    'poisoned' page 0 (seemingly valid positions) must not leak into the
+    output, for both the kernel and the reference."""
+    B, H, HKV, DH, BS, MB, P = 1, 4, 2, 8, 4, 4, 12
+    q = jax.random.normal(KEY, (B, 1, H, DH))
+    kp, vp, bt, ppos = build_pool([10], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    assert (np.asarray(bt)[0] == -1).sum() > 0     # row has unused entries
+    q_pos = jnp.asarray([9], jnp.int32)
+    clean_ref = ref.paged_attention_ref(q, kp, vp, bt, ppos, q_pos)
+    poisoned = jnp.asarray(np.asarray(ppos)).at[0].set(jnp.arange(BS))
+    for fn in (ref.paged_attention_ref,
+               lambda *a, **k: ops.paged_attention(*a, interpret=True, **k)):
+        got = fn(q, kp, vp, bt, poisoned, q_pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(clean_ref),
+                                   atol=3e-5, rtol=1e-4)

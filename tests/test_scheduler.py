@@ -47,6 +47,49 @@ def test_row_prompts_padding():
     assert list(arr[1]) == [1, 2, 3, 4, 5]
 
 
+def test_admit_paged_never_touches_occupied_rows():
+    """Paged admission invariant: a joining request lands only in a fully
+    empty row — occupied sibling slots are never disturbed (no dirty-row
+    re-prefill), and with no empty row the queue is left intact."""
+    s = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64)
+    s.submit(mk_req(0, max_new=8))
+    placements = s.admit_paged()
+    assert [(j, [i for i, _ in p]) for j, p in placements] == [(0, [0])]
+    row0 = [s.slots[0][i] for i in range(2)]
+    # row 0 now occupied (one live stream, one spare slot); a second
+    # arrival must open row 1, not join row 0
+    s.submit(mk_req(1, max_new=8))
+    placements = s.admit_paged()
+    assert [j for j, _ in placements] == [1]
+    assert [s.slots[0][i] for i in range(2)] == row0       # untouched
+    assert s.slots[0][0].request.uid == 0
+    assert s.slots[0][0].pos == 4                          # no re-prefill
+    # all rows occupied -> nothing placed, queue preserved
+    s.submit(mk_req(2))
+    assert s.admit_paged() == []
+    assert len(s.queue) == 1
+
+
+def test_admit_paged_groups_up_to_n_per_row():
+    s = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64)
+    for i in range(3):
+        s.submit(mk_req(i))
+    placements = s.admit_paged()
+    assert [(j, [r.uid for _, r in p]) for j, p in placements] == \
+        [(0, [0, 1]), (1, [2])]
+    assert s.n_active == 3 and not s.queue
+
+
+def test_record_row_tokens_matches_record_tokens():
+    s = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64)
+    for i in range(2):
+        s.submit(mk_req(i, max_new=1))
+    s.admit_paged()                      # both into row 0
+    retired = s.record_row_tokens(0, [7, 8])
+    assert retired == 2 and not s.row_active(0)
+    assert [r.output for r in s.completed] == [[7], [8]]
+
+
 def test_utilization_under_light_load():
     s = ContinuousScheduler(n_mux=4, backbone_batch=2, max_len=64)
     s.submit(mk_req(0))
