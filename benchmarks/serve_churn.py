@@ -1,20 +1,34 @@
-"""Continuous serving under a churning request trace: ring vs paged.
+"""Continuous serving under a churning request trace: ring vs paged,
+blocking vs chunked prefill.
 
 Beyond-paper benchmark for the serve stack (DESIGN.md): a stream of
 requests with heterogeneous prompt lengths and output budgets arrives
-over time; the grid admits and retires streams continuously.  The ring
-layout must re-prefill the whole grid whenever the composition changes;
-the paged layout (``serve.kvpool`` + block tables) prefills only the
-joining mux group and frees blocks on retire.
+over time; the grid admits and retires streams continuously.  Three
+arms over the identical trace:
 
-Reported per layout (CSV: ``serve_churn,<layout>,...``):
-  * tok_s           — generated tokens / wall second
-  * prefill_tokens  — backbone tokens spent in prefill (the re-prefill
-                      tax is the headline difference)
-  * slot_util       — mean occupied fraction of the N_mux × B slot grid
-  * cache_util      — mean occupancy of the cache memory actually
-                      reserved (ring: grid length / capacity; paged:
-                      live tokens / pool slots)
+  * ``ring``           — grid-wide re-prefill on every composition
+                         change (the layout allows nothing finer);
+  * ``paged-blocking`` — block-pool cache, whole prompts prefilled at
+                         admission (the decode grid stalls behind every
+                         joining prompt);
+  * ``paged-chunked``  — the ``ServeRuntime``: shape-bucketed prompt
+                         chunks interleaved with decode, jitted steps
+                         that compile once per bucket.
+
+Reported per arm (CSV: ``serve_churn,<arm>,...``):
+  * tok_s            — generated tokens / wall second
+  * prefill_backbone — backbone token-positions spent in prefill
+                       (per-row tokens × rows touched; the re-prefill
+                       tax is the ring-vs-paged headline)
+  * prefill_compute  — the same after shape-bucket padding (what the
+                       device actually executes; chunked > blocking by
+                       the bucket-padding overhead)
+  * ttft_p50/p95     — request time-to-first-token percentiles (s)
+  * tpot_p50/p95     — per-request time-per-output-token percentiles
+                       (s/token); the blocking-vs-chunked p95 gap is
+                       the no-stall claim, measured
+  * slot_util        — mean occupied fraction of the N_mux × B grid
+  * cache_util       — mean occupancy of the reserved cache memory
 
 Runnable in reduced mode on CPU:
 
@@ -52,17 +66,38 @@ def make_trace(rng, n_requests: int, *, arrival_every: float,
     return out
 
 
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else 0.0
+
+
+def latency_stats(completed):
+    """TTFT / TPOT percentiles from the requests' wall-clock stamps."""
+    ttft = [r.t_first - r.t_submit for r in completed
+            if r.t_first is not None and r.t_submit is not None]
+    tpot = [(r.t_done - r.t_first) / max(len(r.output) - 1, 1)
+            for r in completed
+            if r.t_done is not None and r.t_first is not None]
+    return {"ttft_p50": _pct(ttft, 50), "ttft_p95": _pct(ttft, 95),
+            "tpot_p50": _pct(tpot, 50), "tpot_p95": _pct(tpot, 95)}
+
+
+ARMS = (("ring", "ring", None),
+        ("paged-blocking", "paged", "blocking"),
+        ("paged-chunked", "paged", "chunked"))
+
+
 def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         n_requests=10, arrival_every=2.0, seed=0, block_size=8,
-        prompt=(6, 16), new=(3, 10)):
+        chunk=8, prompt=(6, 16), new=(3, 10)):
     cfg = get_config(arch, reduced=True)
     mux = MuxSpec(n=mux_n)
     params = TransformerLM.init(jax.random.PRNGKey(seed), cfg, mux)
     capacity = prompt[1] + new[1] + block_size
     results = []
-    print("serve_churn,layout,tok_s,prefill_tokens,prefill_events,"
+    print("serve_churn,arm,tok_s,prefill_backbone,prefill_compute,"
+          "prefill_events,ttft_p50,ttft_p95,tpot_p50,tpot_p95,"
           "slot_util,cache_util,requests")
-    for layout in ("ring", "paged"):
+    for arm, layout, mode in ARMS:
         sc = ServeConfig(cfg=cfg, kind="lm", mux=mux, capacity=capacity,
                          dtype=jnp.float32, cache_layout=layout,
                          block_size=block_size)
@@ -71,12 +106,17 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
                            prompt_lo=prompt[0], prompt_hi=prompt[1],
                            new_lo=new[0], new_hi=new[1],
                            vocab=cfg.vocab_size)
-        stats = run_continuous(params, sc, rows, trace)
+        stats = run_continuous(params, sc, rows, trace, chunk=chunk,
+                               prefill_mode=mode or "chunked")
         assert len(stats["completed"]) == n_requests
+        # the arm label must describe what actually ran (the runtime
+        # falls back to blocking for recurrent / contextual-mux configs)
+        assert layout == "ring" or stats["prefill_mode"] == mode
         row = {
-            "layout": layout,
+            "arm": arm,
             "tok_s": stats["generated_tokens"] / max(stats["wall"], 1e-9),
-            "prefill_tokens": stats["prefill_tokens"],
+            "prefill_backbone": stats["prefill_tokens"],
+            "prefill_compute": stats["prefill_compute_tokens"],
             "prefill_events": stats["prefill_events"],
             "slot_util": float(np.mean(stats["slot_util"]))
             if stats["slot_util"] else 0.0,
@@ -84,9 +124,13 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
             if stats["cache_util"] else 0.0,
             "requests": n_requests,
         }
+        row.update(latency_stats(stats["completed"]))
         results.append(row)
-        print(f"serve_churn,{layout},{row['tok_s']:.2f},"
-              f"{row['prefill_tokens']},{row['prefill_events']},"
+        print(f"serve_churn,{arm},{row['tok_s']:.2f},"
+              f"{row['prefill_backbone']},{row['prefill_compute']},"
+              f"{row['prefill_events']},"
+              f"{row['ttft_p50']:.4f},{row['ttft_p95']:.4f},"
+              f"{row['tpot_p50']:.4f},{row['tpot_p95']:.4f},"
               f"{row['slot_util']:.3f},{row['cache_util']:.3f},"
               f"{n_requests}")
     return results
@@ -100,12 +144,13 @@ def main():
     ap.add_argument("--mux-n", type=int, default=2)
     ap.add_argument("--rows", type=int, default=2)
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     n = 6 if args.smoke else args.requests
     t0 = time.time()
     run(arch=args.arch, mux_n=args.mux_n, rows=args.rows, n_requests=n,
-        seed=args.seed)
+        chunk=args.chunk, seed=args.seed)
     print(f"serve_churn done in {time.time() - t0:.0f}s")
 
 

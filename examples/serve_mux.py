@@ -1,32 +1,80 @@
-"""Serve a small model with batched multiplexed requests.
+"""Serve a small model through the compile-once ServeRuntime.
 
-Default: fill-drain batching + load-adaptive ensembling (spare mux
-slots duplicate live requests, logits averaged).
+Builds a reduced mux'd LM, submits a handful of requests with mixed
+per-stream sampling policies (greedy next to nucleus sampling), and
+drives the runtime step by step: prompts prefill in fixed-size chunks
+interleaved with decode, the jitted steps compile once per shape bucket,
+and every request's tokens come back exact (DESIGN.md §step runtime).
 
     PYTHONPATH=src python examples/serve_mux.py
 
-Continuous serving with the paged KV-cache pool (requests join and
-leave the decode loop every step; a joining mux group is prefilled into
-freshly allocated blocks, no sibling row is re-prefilled — DESIGN.md):
-
-    PYTHONPATH=src python examples/serve_mux.py --paged
-
-or any `repro.launch.serve` flags directly, e.g.
+Any argument switches to the full launcher CLI instead, e.g. the
+fill-drain / ring baselines or larger sweeps:
 
     PYTHONPATH=src python examples/serve_mux.py --continuous \
-        --cache ring --requests 8       # grid re-prefill baseline
+        --cache ring --requests 8        # grid re-prefill baseline
+    PYTHONPATH=src python examples/serve_mux.py --paged --requests 6
 """
 import sys
 
-from repro.launch.serve import main
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def runtime_demo():
+    from repro.core import MuxSpec
+    from repro.configs import get_config
+    from repro.models import TransformerLM
+    from repro.serve import Request, SamplingParams, ServeConfig
+    from repro.serve.runtime import ServeRuntime
+
+    arch, mux_n, rows = "gemma-2b", 2, 2
+    cfg = get_config(arch, reduced=True)
+    mux = MuxSpec(n=mux_n)
+    params = TransformerLM.init(jax.random.PRNGKey(0), cfg, mux)
+    sc = ServeConfig(cfg=cfg, kind="lm", mux=mux, capacity=32,
+                     dtype=jnp.float32, cache_layout="paged", block_size=4)
+
+    rt = ServeRuntime(params, sc, rows, chunk=8)
+    rng = np.random.default_rng(0)
+    policies = [None,                                       # greedy
+                SamplingParams(temperature=0.8, top_k=16, seed=1),
+                SamplingParams(temperature=1.0, top_p=0.9, seed=2),
+                None]
+    for uid, sp in enumerate(policies):
+        prompt = rng.integers(4, cfg.vocab_size,
+                              size=(int(rng.integers(5, 14)),))
+        rt.submit(Request(uid=uid, prompt=[int(t) for t in prompt],
+                          max_new=6, sampling=sp))
+
+    while rt.has_work():
+        rt.step()
+
+    for r in sorted(rt.stats["completed"], key=lambda r: r.uid):
+        mode = ("greedy" if r.sampling is None else
+                f"T={r.sampling.temperature} k={r.sampling.top_k} "
+                f"p={r.sampling.top_p}")
+        print(f"request {r.uid} [{mode}] prompt[:4]={r.prompt[:4]} "
+              f"-> {r.output}")
+    s = rt.stats
+    print(f"prefill {s['prefill_tokens']} tokens "
+          f"({s['prefill_compute_tokens']} padded) in "
+          f"{s['prefill_events']} chunks; {s['decode_steps']} decode steps")
+    print("compiled programs:",
+          ", ".join(f"{k}×{v}" for k, v in sorted(s["trace_counts"].items())))
+    return 0
+
 
 if __name__ == "__main__":
-    argv = sys.argv[1:] or ["--arch", "gemma-2b", "--mux-n", "2",
-                            "--requests", "6", "--new-tokens", "6"]
-    if "--paged" in argv:        # shorthand, composable with other flags
-        i = argv.index("--paged")
-        expansion = ["--continuous", "--cache", "paged"]
-        if "--block-size" not in argv:
-            expansion += ["--block-size", "4"]
-        argv = argv[:i] + expansion + argv[i + 1:]
-    raise SystemExit(main(argv))
+    if len(sys.argv) > 1:
+        from repro.launch.serve import main
+        argv = sys.argv[1:]
+        if "--paged" in argv:        # shorthand, composable with other flags
+            i = argv.index("--paged")
+            expansion = ["--continuous", "--cache", "paged"]
+            if "--block-size" not in argv:
+                expansion += ["--block-size", "4"]
+            argv = argv[:i] + expansion + argv[i + 1:]
+        raise SystemExit(main(argv))
+    raise SystemExit(runtime_demo())

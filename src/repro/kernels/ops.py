@@ -56,3 +56,10 @@ def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, **kw):
     kw.setdefault("interpret", _interpret())
     return _paged.paged_attention(q, k_pages, v_pages, block_tables,
                                   page_pos, q_pos, **kw)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
+                            q_start, q_len, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _paged.paged_prefill_attention(q, k_pages, v_pages, block_tables,
+                                          page_pos, q_start, q_len, **kw)

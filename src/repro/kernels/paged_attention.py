@@ -1,5 +1,6 @@
-"""Pallas TPU kernel: paged flash-decode — single-query attention over a
-block-table-addressed KV pool (vLLM-style paged attention).
+"""Pallas TPU kernels: paged attention over a block-table-addressed KV
+pool (vLLM-style) — flash-decode (``paged_attention``) and the
+chunked-prefill variant (``paged_prefill_attention``).
 
 Same math as ``kernels/decode_attention.py`` (online-softmax state in
 VMEM scratch across a sequential cache-block grid axis), but the cache
@@ -18,6 +19,13 @@ Differences from the contiguous kernel:
     and masked out via the prefetched table inside the kernel;
   * slot validity comes from the pool's per-slot position map ((P, BS),
     -1 = empty), the paged analogue of the ring's position vector.
+
+``paged_prefill_attention`` generalizes the query axis to a chunk of
+Lq > 1 tokens at per-row start offsets (chunked prefill: the chunk's KV
+has already been scattered into the row's pages, and each query attends
+causally over every previously written block plus the chunk's own
+entries).  Queries past a row's valid length (bucket padding) are fully
+masked and produce discarded output.
 """
 from __future__ import annotations
 
@@ -119,3 +127,114 @@ def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, *,
         interpret=interpret,
     )(block_tables, q_pos, qt, kt, vt, page_pos)
     return out.reshape(b, 1, h, dh)
+
+
+def _prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, pos_ref,
+                    o_ref, m_ref, l_ref, acc_ref, *, mb: int, lq: int,
+                    g: int, window, causal: bool):
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G*Lq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, dh) one page
+    v = v_ref[0, 0].astype(jnp.float32)
+    pos = pos_ref[0]                               # (bs,) slot positions
+    dh = q.shape[-1]
+    bs = k.shape[0]
+
+    s = jnp.dot(q * dh ** -0.5, k.T)               # (G*Lq, bs)
+    # per-query absolute positions: start + 0..Lq-1; entries past the
+    # row's valid length (bucket padding) are fully masked
+    li = jax.lax.broadcasted_iota(jnp.int32, (lq, bs), 0)
+    q_pos = qs_ref[bi] + li                        # (Lq, bs)
+    mask = (pos[None, :] >= 0) & (bt_ref[bi, ji] >= 0) \
+        & (li < ql_ref[bi]) & (qs_ref[bi] >= 0)
+    if causal:
+        mask &= pos[None, :] <= q_pos
+    if window is not None:
+        mask &= pos[None, :] > q_pos - window
+    # (Lq, bs) -> broadcast over the G grouped queries -> (G*Lq, bs)
+    mask = jnp.broadcast_to(mask[None], (g, lq, bs)).reshape(g * lq, bs)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ji == mb - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(
+            l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
+                            q_start, q_len, *, window=None,
+                            causal: bool = True, interpret: bool = False):
+    """Chunked-prefill attention over the pool: Lq queries per row.
+
+    q: (B, Lq, H, Dh) one prompt chunk per row (KV already written to
+    the row's pages); k_pages/v_pages: (P, BS, Hkv, Dh) shared pool;
+    block_tables: (B, MB) int32 page ids (-1 = unallocated);
+    page_pos: (P, BS) int32 absolute position per pool slot (-1 = empty);
+    q_start: (B,) int32 chunk start offset per row (-1 = inactive row);
+    q_len: (B,) int32 valid queries per row (entries >= q_len are bucket
+    padding whose output is discarded).  Returns (B, Lq, H, Dh).
+    """
+    b, lq, h, dh = q.shape
+    bs, hkv = k_pages.shape[1], k_pages.shape[2]
+    g = h // hkv
+    mb = block_tables.shape[1]
+    block_tables = block_tables.astype(jnp.int32)
+    q_start = jnp.asarray(q_start, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+
+    # (B, Lq, Hkv, G, Dh) -> (B, Hkv, G*Lq, Dh): G-major so the (Lq, bs)
+    # mask broadcasts over groups with one reshape
+    qt = q.reshape(b, lq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+    qt = qt.reshape(b, hkv, g * lq, dh)
+    kt = k_pages.transpose(0, 2, 1, 3)             # (P, Hkv, BS, dh)
+    vt = v_pages.transpose(0, 2, 1, 3)
+
+    def page_map(b_, h_, j, bt, qs, ql):
+        return (jnp.maximum(bt[b_, j], 0), h_, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                     # bt, q_start, q_len
+        grid=(b, hkv, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * lq, dh),
+                         lambda b_, h_, j, bt, qs, ql: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), page_map),
+            pl.BlockSpec((1, 1, bs, dh), page_map),
+            pl.BlockSpec((1, bs),
+                         lambda b_, h_, j, bt, qs, ql:
+                         (jnp.maximum(bt[b_, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * lq, dh),
+                               lambda b_, h_, j, bt, qs, ql: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * lq,), jnp.float32),
+            pltpu.VMEM((g * lq,), jnp.float32),
+            pltpu.VMEM((g * lq, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, mb=mb, lq=lq, g=g,
+                          window=window, causal=causal),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * lq, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, q_start, q_len, qt, kt, vt, page_pos)
+    return out.reshape(b, hkv, g, lq, dh).transpose(0, 3, 1, 2, 4) \
+              .reshape(b, lq, h, dh)

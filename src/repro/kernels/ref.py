@@ -82,3 +82,33 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, page_pos, q_pos,
                                window=window, kv_valid=pos >= 0)
     mask &= (q_pos >= 0)[:, None, None]
     return attention_core(q, k, v, mask=mask)
+
+
+def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,
+                                page_pos, q_start, q_len, *, window=None,
+                                causal=True):
+    """Oracle for the chunked-prefill paged kernel: gather each row's
+    pages into a contiguous cache, then naive attention with per-query
+    position masks.
+
+    q: (B, Lq, H, Dh); q_start: (B,) chunk start offsets (-1 = inactive
+    row); q_len: (B,) valid query counts (entries >= q_len are bucket
+    padding, fully masked).  Other args as ``paged_attention_ref``.
+    """
+    from repro.nn.attention import attention_core, make_attention_mask
+    bt = jnp.asarray(block_tables)
+    b = bt.shape[0]
+    lq = q.shape[1]
+    btc = jnp.maximum(bt, 0)
+    k = k_pages[btc].reshape(b, -1, *k_pages.shape[2:])
+    v = v_pages[btc].reshape(b, -1, *v_pages.shape[2:])
+    pos = jnp.where(bt[..., None] >= 0, page_pos[btc], -1).reshape(b, -1)
+    q_start = jnp.asarray(q_start)
+    q_len = jnp.asarray(q_len)
+    q_pos = q_start[:, None] + jnp.arange(lq)[None]          # (B, Lq)
+    q_pos = jnp.where((jnp.arange(lq)[None] >= q_len[:, None])
+                      | (q_start[:, None] < 0), -1, q_pos)
+    mask = make_attention_mask(q_pos, pos, causal=causal, window=window,
+                               kv_valid=pos >= 0)
+    mask &= (q_pos >= 0)[..., None]
+    return attention_core(q, k, v, mask=mask)

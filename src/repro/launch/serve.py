@@ -5,17 +5,24 @@ Two modes (DESIGN.md):
   * fill-drain (default): ``MuxBatcher`` packs requests into the
     N_mux × B grid; spare slots duplicate live requests and the averaged
     logits implement the paper's ensembling mode.
-  * continuous (``--continuous``): ``ContinuousScheduler`` admits and
-    retires requests every decode step.  ``--cache ring`` re-prefills
-    the whole grid whenever the composition changes (the ring layout's
-    shared position vector allows nothing finer); ``--cache paged``
-    prefills ONLY the joining row into freshly allocated KV blocks
-    (``serve.kvpool``) and frees them on retire.
+  * continuous (``--continuous``): requests join and leave the decode
+    loop every step.  ``--cache ring`` re-prefills the whole grid
+    whenever the composition changes (the ring layout's shared position
+    vector allows nothing finer); ``--cache paged`` runs the
+    ``serve.runtime.ServeRuntime`` — jitted shape-stable steps, prompts
+    prefilled in fixed-size chunks interleaved with decode
+    (``--prefill chunked``, the default) or whole-prompt at admission
+    (``--prefill blocking``, the measured baseline).
 
     python -m repro.launch.serve --arch qwen2-1.5b --mux-n 2 \
         --requests 8 --new-tokens 8
     python -m repro.launch.serve --arch qwen2-1.5b --continuous \
-        --cache paged --requests 8 --new-tokens 8
+        --cache paged --requests 8 --new-tokens 8 --temperature 0.8
+
+Sampling (``serve.sampling``) is per-stream: ``--temperature``,
+``--top-k`` and ``--top-p`` set every request's policy here, with the
+request uid as its seed; programmatic callers attach a ``SamplingParams``
+per request instead.
 """
 from __future__ import annotations
 
@@ -31,51 +38,97 @@ from repro.core import MuxSpec
 from repro.configs import get_config, model_kind
 from repro.models import TransformerLM, VLM, EncDecLM
 from repro.serve import (ServeConfig, init_cache, prefill, decode_step,
-                         MuxBatcher, Request, make_pool, set_block_tables,
-                         reset_blocks, PoolExhausted)
-from repro.serve.scheduler import ContinuousScheduler, StreamSlot
+                         MuxBatcher, Request, sampling)
+from repro.serve.runtime import ServeRuntime
+from repro.serve.scheduler import ContinuousScheduler
+
+
+def _sample_grid(sched, logits, default_sampling):
+    """Sample one token per grid slot (mux-major instance order) with
+    each slot's own SamplingParams."""
+    plist, steps = [], []
+    for i in range(sched.n_mux):
+        for j in range(sched.backbone_batch):
+            r = sched.slots[j][i].request
+            plist.append((r.sampling or default_sampling)
+                         if r is not None else None)
+            steps.append(len(r.output) if r is not None else 0)
+    if all(p is None or p.temperature <= 0 for p in plist):
+        return np.asarray(sampling.greedy(logits))    # skip sampler machinery
+    return np.asarray(sampling.sample_params(
+        logits, plist, np.asarray(steps, np.int32)))
 
 
 def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
-                   *, pad_id: int = 0, on_prefill=None):
+                   *, pad_id: int = 0, on_prefill=None, chunk: int = 32,
+                   prefill_mode: str = "chunked", default_sampling=None):
     """Continuous-batching serve loop for both cache layouts.
 
-    arrivals: iterable of (step, prompt_tokens, max_new), sorted by step.
-    Each loop iteration admits what it can, then runs one decode step
-    over the grid.  Returns a stats dict (completed requests, prefill
-    backbone-token counts, utilization samples, wall time).
+    arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams]),
+    sorted by step.  Each loop iteration admits what it can, then runs
+    one decode step over the grid.  Returns a stats dict.
+
+    Prefill accounting (consistent across arms — DESIGN.md):
+      * ``prefill_tokens``          — backbone token-positions processed
+                                      (per-row tokens × rows touched);
+      * ``prefill_compute_tokens``  — same, after shape-bucket padding
+                                      (the compute actually dispatched);
+      * ``prefill_log``             — (rows, per_row_tokens) per event;
+        ``on_prefill(rows, per_row_tokens)`` mirrors the log entries.
 
     ring:  admission re-prefills the WHOLE grid from every row's current
            tokens (the shared slot-position vector makes positions
-           uniform across rows, so one row cannot be rebuilt alone);
-           rows whose true sequence is shorter than the padded grid
-           length are position-padded (approximate — DESIGN.md).
-    paged: admission prefills only the joining rows (one backbone call
-           per new mux group, ``prefill(..., rows=[j])``); sibling rows'
-           blocks are untouched, drained rows free their blocks.
+           uniform across rows, so one row cannot be rebuilt alone).
+    paged: ``ServeRuntime`` — a joining row's prompt advances one chunk
+           per engine step while live rows keep decoding
+           (``prefill_mode='chunked'``), or is prefilled whole at
+           admission (``'blocking'``, the pre-runtime baseline).
     """
     if sc.kind != "lm":
         raise NotImplementedError(
             "continuous serving supports decoder-only LM families")
+    arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
+    uid = 0
+    t0 = time.time()
+
+    def _pop_arrivals(step, submit):
+        nonlocal uid
+        while arrivals and arrivals[0][0] <= step:
+            a = arrivals.popleft()
+            sp = a[3] if len(a) > 3 else None
+            submit(Request(uid=uid, prompt=list(a[1]), max_new=a[2],
+                           sampling=sp))
+            uid += 1
+
+    if sc.cache_layout == "paged":
+        rt = ServeRuntime(params, sc, backbone_rows,
+                          chunk=None if prefill_mode == "blocking"
+                          else chunk,
+                          pad_id=pad_id, default_sampling=default_sampling,
+                          on_prefill=on_prefill)
+        step = 0
+        while arrivals or rt.has_work():
+            _pop_arrivals(step, rt.submit)
+            rt.step()
+            step += 1
+        stats = rt.stats
+        stats["wall"] = time.time() - t0
+        stats["generated_tokens"] = sum(
+            len(r.output) for r in stats["completed"])
+        return stats
+
+    # ------------------------------------------------------------- ring
     n_mux = max(sc.mux.n, 1)
     nrows = backbone_rows
     nb_inst = n_mux * nrows
-    paged = sc.cache_layout == "paged"
     sched = ContinuousScheduler(n_mux=n_mux, backbone_batch=nrows,
                                 max_len=sc.capacity)
-    arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
-    uid = 0
-    stats = {"prefill_tokens": 0, "prefill_events": 0, "decode_steps": 0,
+    stats = {"prefill_tokens": 0, "prefill_compute_tokens": 0,
+             "prefill_events": 0, "decode_steps": 0,
              "prefill_log": [], "slot_util": [], "cache_util": [],
              "completed": sched.completed}
-    next_tok = np.zeros((n_mux, nrows), np.int64)
-    if paged:
-        pool = make_pool(sc, nb_inst)
-        cache = init_cache(sc, nb_inst)
-        row_len = {}
-        stats["pool"] = pool
-    else:
-        cache, grid_pos = None, 0
+    next_tok = np.zeros((n_mux, nrows), np.int32)
+    cache, grid_pos = None, 0
 
     def _clear_dead_slots():
         for i in range(n_mux):
@@ -83,59 +136,12 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                 if sched.slots[j][i].request is None:
                     next_tok[i, j] = pad_id
 
-    def _free_drained_rows():
-        for j in list(row_len):
-            if not sched.row_active(j):
-                pool.free(j)
-                del row_len[j]
-
     step = 0
-    t0 = time.time()
     while arrivals or sched.queue or sched.n_active:
-        while arrivals and arrivals[0][0] <= step:
-            _, prompt, max_new = arrivals.popleft()
-            sched.submit(Request(uid=uid, prompt=list(prompt),
-                                 max_new=max_new))
-            uid += 1
+        _pop_arrivals(step, sched.submit)
 
         # -- admission ---------------------------------------------------
-        if paged:
-            for j, placed in sched.admit_paged():
-                prompts = sched.row_prompts(j, pad_id)          # (N, L)
-                l_pad = prompts.shape[1]
-                try:
-                    blocks = pool.allocate(j, l_pad)
-                except PoolExhausted:
-                    # backpressure: un-place this group and retry once
-                    # blocks free up; later groups still get their shot
-                    for i, r in reversed(placed):
-                        sched.slots[j][i] = StreamSlot()
-                        sched.queue.appendleft(r)
-                    if pool.n_used_blocks == 0:
-                        raise PoolExhausted(
-                            f"request group of {l_pad} tokens cannot fit "
-                            f"an empty pool (num_blocks="
-                            f"{pool.num_blocks}, block_size="
-                            f"{pool.block_size}, per-seq cap "
-                            f"{pool.max_blocks_per_seq})")
-                    continue
-                row_len[j] = l_pad
-                cache = reset_blocks(cache, blocks)
-                cache = set_block_tables(cache,
-                                         pool.table_array(range(nrows)))
-                logits, cache = prefill(params, sc, cache,
-                                        jnp.asarray(prompts), rows=[j])
-                stats["prefill_tokens"] += l_pad                # backbone rows=1
-                stats["prefill_events"] += 1
-                stats["prefill_log"].append(((j,), l_pad))
-                if on_prefill is not None:
-                    on_prefill((j,), l_pad)
-                toks = np.asarray(logits.argmax(-1))            # (N,)
-                sched.record_row_tokens(j, toks)
-                next_tok[:, j] = toks
-            _free_drained_rows()
-        elif sched.admit() or (sched.n_active
-                               and grid_pos >= sc.capacity):
+        if sched.admit() or (sched.n_active and grid_pos >= sc.capacity):
             # ring: any composition change -> grid-wide re-prefill of
             # every row's prompt + generated tokens, padded to a common
             # length; this *is* the cost the paged layout removes.  The
@@ -155,89 +161,55 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                                     jnp.asarray(arr.reshape(nb_inst, l_pad)))
             grid_pos = l_pad
             stats["prefill_tokens"] += l_pad * nrows
+            stats["prefill_compute_tokens"] += l_pad * nrows
             stats["prefill_events"] += 1
-            stats["prefill_log"].append((tuple(range(nrows)), l_pad * nrows))
+            stats["prefill_log"].append((tuple(range(nrows)), l_pad))
             if on_prefill is not None:
-                on_prefill(tuple(range(nrows)), l_pad * nrows)
-            toks = np.asarray(logits.argmax(-1))                # (NB,)
+                on_prefill(tuple(range(nrows)), l_pad)
+            toks = _sample_grid(sched, logits, default_sampling)   # (NB,)
             sched.record_tokens(toks)
-            next_tok = toks.reshape(n_mux, nrows).copy()
+            next_tok = toks.reshape(n_mux, nrows).astype(np.int32)
 
         # -- one decode step over the grid -------------------------------
         if sched.n_active:
             _clear_dead_slots()
-            if paged:
-                pos_vec = np.full((nrows,), -1, np.int64)
-                fresh, preempt = [], []
-                for j in list(row_len):
-                    try:
-                        fresh += pool.append(j)     # reserve the new slot
-                    except PoolExhausted:
-                        preempt.append(j)
-                        continue
-                    pos_vec[j] = row_len[j]
-                # a row that outgrows the pool while it is the SOLE user
-                # can never be served (requeueing would thrash forever);
-                # with siblings, preempted rows simply retry after drains
-                if preempt and len(row_len) == 1:
-                    raise PoolExhausted(
-                        "a single row outgrew the whole pool "
-                        f"(num_blocks={pool.num_blocks}, block_size="
-                        f"{pool.block_size}) — it can never be served")
-                for j in preempt:
-                    # preempt the row: requeue its live requests (their
-                    # prompt + generated-so-far is re-prefilled on
-                    # re-admission) and return its blocks
-                    for i in reversed(range(n_mux)):
-                        s = sched.slots[j][i]
-                        if s.request is not None:
-                            sched.queue.appendleft(s.request)
-                        sched.slots[j][i] = StreamSlot()
-                    pool.free(j)
-                    del row_len[j]
-                if fresh:
-                    cache = reset_blocks(cache, fresh)
-                if fresh or preempt:
-                    cache = set_block_tables(
-                        cache, pool.table_array(range(nrows)))
-                if not row_len:
-                    step += 1
-                    continue                        # everyone preempted
-                pos = jnp.asarray(pos_vec)
-            else:
-                pos = grid_pos
             toks_in = jnp.asarray(next_tok.reshape(-1))[:, None]
-            logits, cache = decode_step(params, sc, cache, toks_in, pos)
-            out = np.asarray(logits[:, 0].argmax(-1))
+            logits, cache = decode_step(params, sc, cache, toks_in,
+                                        grid_pos)
+            out = _sample_grid(sched, logits[:, 0], default_sampling)
             sched.record_tokens(out)
-            next_tok = out.reshape(n_mux, nrows).copy()
+            next_tok = out.reshape(n_mux, nrows).astype(np.int32)
             stats["decode_steps"] += 1
             stats["slot_util"].append(sched.utilization())
-            if paged:
-                for j in row_len:
-                    row_len[j] += 1
-                _free_drained_rows()
-                stats["cache_util"].append(pool.utilization())
-            else:
-                grid_pos += 1
-                stats["max_grid_pos"] = max(
-                    stats.get("max_grid_pos", 0), grid_pos)
-                stats["cache_util"].append(
-                    min(grid_pos, sc.capacity) / sc.capacity
-                    if sched.n_active else 0.0)
+            grid_pos += 1
+            stats["max_grid_pos"] = max(
+                stats.get("max_grid_pos", 0), grid_pos)
+            stats["cache_util"].append(
+                min(grid_pos, sc.capacity) / sc.capacity
+                if sched.n_active else 0.0)
         step += 1
     stats["wall"] = time.time() - t0
     stats["generated_tokens"] = sum(len(r.output) for r in sched.completed)
     return stats
 
 
-def _fill_drain(params, sc, cfg, kind, args):
+def _fill_drain(params, sc, cfg, kind, args, default_sampling):
+    import dataclasses
     batcher = MuxBatcher(n_mux=sc.mux.n, backbone_batch=args.backbone_batch)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
-        batcher.submit(rng.integers(
+        r = batcher.submit(rng.integers(
             4, cfg.vocab_size, size=(args.prompt_len,)).astype(np.int32),
             max_new=args.new_tokens)
+        if default_sampling is not None:
+            # per-request seed: streams must not draw correlated noise
+            r.sampling = dataclasses.replace(default_sampling, seed=r.uid)
+
+    def _sample(ens, slots_unique, t):
+        plist = [r.sampling or default_sampling for r in slots_unique]
+        if all(p is None or p.temperature <= 0 for p in plist):
+            return sampling.greedy(ens)
+        return sampling.sample_params(ens, plist, t)
 
     served = 0
     t0 = time.time()
@@ -245,6 +217,7 @@ def _fill_drain(params, sc, cfg, kind, args):
         slots, owners = batcher.next_batch()
         if slots is None:
             break
+        uniq = list({id(s): s for s in slots}.values())
         prompts = jnp.stack([jnp.asarray(s.prompt) for s in slots])
         cache = init_cache(sc, prompts.shape[0])
         extra = None
@@ -256,20 +229,20 @@ def _fill_drain(params, sc, cfg, kind, args):
                 (prompts.shape[0], cfg.encoder.frontend_len,
                  cfg.encoder.d_model), jnp.float32)
         logits, cache = prefill(params, sc, cache, prompts, extra=extra)
-        n_unique = len(set(id(s) for s in slots))
+        n_unique = len(uniq)
         ens = MuxBatcher.combine_logits(logits, owners, n_unique)
-        tok_unique = ens.argmax(-1)
+        tok_unique = _sample(ens, uniq, 0)
         toks = tok_unique[jnp.asarray(owners)][:, None]
         outs = [tok_unique]
         for t in range(args.new_tokens - 1):
             lg, cache = decode_step(params, sc, cache, toks,
                                     args.prompt_len + t)
             ens = MuxBatcher.combine_logits(lg[:, 0], owners, n_unique)
-            tok_unique = ens.argmax(-1)
+            tok_unique = _sample(ens, uniq, t + 1)
             toks = tok_unique[jnp.asarray(owners)][:, None]
             outs.append(tok_unique)
         served += n_unique
-        for j, s in enumerate({id(s): s for s in slots}.values()):
+        for j, s in enumerate(uniq):
             s.output = [int(o[j]) for o in outs]
             s.done = True
     dt = time.time() - t0
@@ -297,8 +270,21 @@ def main(argv=None):
                     help="KV-cache layout for --continuous")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged layout: tokens per KV block")
+    ap.add_argument("--prefill", choices=("chunked", "blocking"),
+                    default="chunked",
+                    help="paged: interleave fixed-size prompt chunks with "
+                         "decode, or prefill whole prompts at admission")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="paged chunked prefill: tokens per chunk")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous: one request arrives every K steps")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for all requests "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus filter (1.0 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -312,27 +298,47 @@ def main(argv=None):
                      dtype=jnp.float32,
                      cache_layout=args.cache if args.continuous else "ring",
                      block_size=args.block_size)
+    default_sampling = None
+    if args.temperature > 0:
+        default_sampling = sampling.SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed)
 
     if not args.continuous:
-        _fill_drain(params, sc, cfg, kind, args)
+        _fill_drain(params, sc, cfg, kind, args, default_sampling)
         return 0
 
     rng = np.random.default_rng(args.seed)
-    arrivals = [
-        (i * args.arrival_every,
-         rng.integers(4, cfg.vocab_size,
-                      size=(args.prompt_len,)).astype(np.int32),
-         args.new_tokens)
-        for i in range(args.requests)]
-    stats = run_continuous(params, sc, args.backbone_batch, arrivals)
+    arrivals = []
+    for i in range(args.requests):
+        sp = default_sampling and sampling.SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=i)
+        arrivals.append(
+            (i * args.arrival_every,
+             rng.integers(4, cfg.vocab_size,
+                          size=(args.prompt_len,)).astype(np.int32),
+             args.new_tokens, sp))
+    stats = run_continuous(params, sc, args.backbone_batch, arrivals,
+                           chunk=args.chunk, prefill_mode=args.prefill,
+                           default_sampling=default_sampling)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
-    print(f"continuous[{sc.cache_layout}] served {done} requests "
+    # report the mode that actually ran (the runtime falls back to
+    # blocking for recurrent blocks / contextual mux)
+    mode = (f"paged/{stats['prefill_mode']}" if sc.cache_layout == "paged"
+            else "ring")
+    print(f"continuous[{mode}] served {done} requests "
           f"({stats['generated_tokens']} tokens) in {stats['wall']:.1f}s  "
           f"(mux N={mux.n}, rows {args.backbone_batch}; "
           f"{stats['generated_tokens'] / stats['wall']:.1f} tok/s, "
-          f"prefill {stats['prefill_tokens']} backbone tokens in "
+          f"prefill {stats['prefill_tokens']} backbone tokens "
+          f"({stats['prefill_compute_tokens']} padded) in "
           f"{stats['prefill_events']} events, slot util {util:.2f})")
+    if "trace_counts" in stats:
+        compiled = ", ".join(f"{k}×{v}"
+                             for k, v in sorted(stats["trace_counts"].items()))
+        print(f"compiled programs: {compiled}")
     return 0
 
 

@@ -355,11 +355,22 @@ def init_paged_kv_cache(cfg, batch: int, num_blocks: int, block_size: int,
 
 def _paged_positions(ctx, batch: int, l: int):
     """Per-row absolute positions (B, L) from ctx['q_offset'] (scalar or
-    (B,) vector; -1 marks an inactive row -> all positions invalid)."""
+    (B,) vector; -1 marks an inactive row -> all positions invalid).
+    ctx['q_end'] (scalar or (B,)), if present, invalidates positions at
+    or past it — chunked prefill pads the last chunk of a prompt to a
+    shape bucket, and the padded tail must neither write real KV nor
+    attend (its writes route to the trash block, its queries are fully
+    masked)."""
     qo = jnp.asarray(ctx.get("q_offset", 0))
     if qo.ndim == 0:
         qo = jnp.full((batch,), qo)
     pos = qo[:, None] + jnp.arange(l)[None]
+    q_end = ctx.get("q_end")
+    if q_end is not None:
+        qe = jnp.asarray(q_end)
+        if qe.ndim == 0:
+            qe = jnp.full((batch,), qe)
+        pos = jnp.where(pos >= qe[:, None], -1, pos)
     return jnp.where(qo[:, None] < 0, -1, pos)
 
 
@@ -427,6 +438,32 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
                 q_pos, cache["pos"], causal=cfg.causal, window=window,
                 kv_valid=cache["pos"] >= 0)[None]
             o = attention_core(q, cache["k"], cache["v"], mask=mask,
+                               logit_softcap=cfg.logit_softcap)
+    elif paged and ctx.get("chunked"):
+        # chunked prefill: scatter this chunk's K/V into the rows' pages,
+        # then attend over EVERY previously written block plus the
+        # chunk's own entries (mid-sequence chunks depend on earlier
+        # chunks' KV, unlike the single-shot prefill below which only
+        # ever sees its own fresh K/V).
+        from repro.serve.kvpool import paged_write, paged_view
+        rows = ctx.get("rows")
+        bt = cache["bt"] if rows is None else cache["bt"][rows]
+        posm = _paged_positions(ctx, b, l)                  # (B, L)
+        cache = paged_write(cache, k, v, posm, block_tables=bt)
+        if ctx.get("use_kernels") and cfg.logit_softcap is None:
+            from repro.kernels import ops as kops
+            q_start = posm[:, 0]                            # -1 iff inactive
+            q_len = (posm >= 0).sum(-1)
+            o = kops.paged_prefill_attention(
+                q, cache["kp"], cache["vp"], bt, cache["ppos"],
+                q_start, q_len, window=window, causal=cfg.causal)
+        else:
+            kc, vc, kvpos = paged_view({**cache, "bt": bt})
+            mask = make_attention_mask(
+                posm, kvpos, causal=cfg.causal, window=window,
+                kv_valid=kvpos >= 0)
+            mask &= (posm >= 0)[..., None]       # padded / inactive queries
+            o = attention_core(q, kc, vc, mask=mask,
                                logit_softcap=cfg.logit_softcap)
     else:
         if paged:

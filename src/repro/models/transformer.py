@@ -117,7 +117,11 @@ class TransformerLM:
         # q_offset: scalar, or a (B,) vector of per-row offsets (paged
         # continuous serving — rows sit at different decode positions;
         # -1 marks an inactive row, clamped to 0 for the embeddings and
-        # masked at the cache/attention level).
+        # masked at the cache/attention level).  Chunked prefill passes
+        # a mid-sequence start offset with L > 1 (plus 'q_end' in
+        # extra_ctx bounding the valid positions of a bucket-padded
+        # chunk): RoPE/learned positions below are offset-correct for
+        # both shapes, and the paged write/attend path masks the tail.
         qo = jnp.asarray(q_offset)
         if qo.ndim:
             pos = jnp.maximum(qo, 0)[:, None] + jnp.arange(l)[None]  # (B, L)

@@ -5,26 +5,33 @@ Fill-drain path: ``MuxBatcher`` packs requests into the N_mux × B grid
 engine runs prefill + decode over the whole batch.
 
 Continuous path: ``ContinuousScheduler`` admits and retires requests at
-every decode step.  With the paged cache layout (``KVPool`` block pool +
-per-row block tables + the Pallas paged decode-attention kernel) a
-joining request is prefilled into freshly allocated blocks without
-re-prefilling any occupied sibling row, and a retiring row returns its
-blocks to the pool:
+every decode step and emits plans that ``ServeRuntime`` executes through
+jitted, shape-stable step functions.  With the paged cache layout
+(``KVPool`` block pool + per-row block tables + the Pallas paged
+attention kernels) a joining request's prompt is prefilled in fixed-size
+chunks into freshly allocated blocks — one chunk per engine step, decode
+never stalls, no occupied sibling row is touched — and a retiring row
+returns its blocks to the pool.  Token decisions go through
+``serve.sampling`` (per-stream greedy / temperature / top-k / top-p):
 
     sc = ServeConfig(..., cache_layout="paged", block_size=16)
-    pool = make_pool(sc, global_batch)
-    cache = init_cache(sc, global_batch)
-    blocks = pool.allocate(row, prompt_len)
-    cache = reset_blocks(cache, blocks)        # pool reuses freed blocks
-    cache = set_block_tables(cache, pool.table_array(range(B)))
-    logits, cache = prefill(params, sc, cache, row_tokens, rows=[row])
-    logits, cache = decode_step(params, sc, cache, toks, per_row_pos)
+    rt = ServeRuntime(params, sc, backbone_rows, chunk=32)
+    rt.submit(Request(uid=0, prompt=toks, max_new=16,
+                      sampling=SamplingParams(temperature=0.8)))
+    while rt.has_work():
+        rt.step()
 
-``launch.serve --continuous --cache paged`` wires this end to end.
+``launch.serve --continuous --cache paged`` wires this end to end; the
+lower-level ``prefill(..., rows=[j])`` / ``prefill_chunk`` /
+``decode_step`` engine calls remain available for custom loops.
 """
 from repro.serve.engine import (
-    ServeConfig, init_cache, prefill, decode_step, greedy_generate,
-    backbone_batch, make_pool, set_block_tables, reset_blocks,
+    ServeConfig, init_cache, prefill, prefill_chunk, decode_step,
+    greedy_generate, backbone_batch, make_pool, set_block_tables,
+    reset_blocks,
 )
 from repro.serve.batcher import MuxBatcher, Request
 from repro.serve.kvpool import KVPool, PoolError, PoolExhausted
+from repro.serve import sampling
+from repro.serve.sampling import SamplingParams
+from repro.serve.runtime import ServeRuntime

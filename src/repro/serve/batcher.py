@@ -12,6 +12,8 @@ import collections
 import itertools
 from dataclasses import dataclass, field
 
+import jax.numpy as jnp
+
 
 @dataclass
 class Request:
@@ -20,6 +22,10 @@ class Request:
     max_new: int = 16
     done: bool = False
     output: list = field(default_factory=list)
+    sampling: object = None         # serve.sampling.SamplingParams | None
+    t_submit: float = None          # wall-clock request lifecycle stamps
+    t_first: float = None           # (scheduler-set; TTFT/TPOT metrics)
+    t_done: float = None
 
 
 @dataclass
@@ -65,7 +71,6 @@ class MuxBatcher:
         logits: (capacity, ...); owners: list[int] of len capacity.
         Returns (n_unique, ...) ensembled logits.
         """
-        import jax.numpy as jnp
         acc = jnp.zeros((n_unique,) + logits.shape[1:], logits.dtype)
         cnt = jnp.zeros((n_unique,) + (1,) * (logits.ndim - 1),
                         logits.dtype)

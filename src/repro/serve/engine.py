@@ -145,6 +145,43 @@ def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None,
     return out["logits"][:, -1], out["cache"]
 
 
+def prefill_chunk(params, sc: ServeConfig, cache, tokens, *, rows, start,
+                  length, use_kernels: bool = False):
+    """Chunked prefill (paged layout only): one fixed-size prompt chunk
+    for the backbone rows in ``rows``.
+
+    tokens: (len(rows) * N_mux, C) bucket-padded chunk; KV is written at
+    absolute positions ``start .. start + length - 1`` into the rows'
+    pages (the padded tail routes to the trash block) and each query
+    attends causally over the rows' previously written blocks plus the
+    chunk's own entries.  ``start``/``length`` may be traced scalars (or
+    (len(rows),) vectors for heterogeneous rows), so a jitted wrapper
+    compiles once per chunk bucket C.  Returns (logits at the last valid
+    chunk position (len(rows) * N_mux, V), cache).
+    """
+    if sc.cache_layout != "paged":
+        raise ValueError("prefill_chunk requires the paged cache layout")
+    if sc.kind != "lm":
+        raise NotImplementedError(
+            "chunked prefill supports decoder-only LM families")
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    out = TransformerLM.apply(
+        params, sc.cfg, tokens, mux=sc.mux, cache=cache, q_offset=start,
+        dtype=sc.dtype, logits_out=False, use_kernels=use_kernels,
+        extra_ctx={"rows": jnp.asarray(rows, jnp.int32), "chunked": True,
+                   "q_end": start + length})
+    # logits only at the chunk's last valid position (dynamic under jit):
+    # the bucket-padded tail positions carry garbage hidden states
+    h = out["hidden"]                                        # (NB, C, D)
+    if length.ndim:          # heterogeneous rows, mux-major instance order
+        last = jnp.tile(length, h.shape[0] // length.shape[0]) - 1
+    else:
+        last = jnp.full((h.shape[0],), length - 1)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+    return TransformerLM.logits(params, sc.cfg, h_last)[:, 0], out["cache"]
+
+
 def decode_step(params, sc: ServeConfig, cache, tokens, pos):
     """One decode step.  tokens: (NB, 1); pos: static int, traced scalar,
     or — paged layout — a (B,) int32 vector of per-row positions (-1 =
@@ -172,12 +209,13 @@ def greedy_generate(params, sc: ServeConfig, prompt, *, steps: int,
         for j in range(b):
             pool.allocate(j, prompt.shape[1] + steps)
         cache = set_block_tables(cache, pool.table_array(range(b)))
+    from repro.serve import sampling
     logits, cache = prefill(params, sc, cache, prompt, extra=extra)
-    tok = logits.argmax(-1)[:, None]
+    tok = sampling.greedy(logits)[:, None]
     out = [tok]
     pos = prompt.shape[1]
     for t in range(steps - 1):
         logits, cache = decode_step(params, sc, cache, tok, pos + t)
-        tok = logits[:, -1].argmax(-1)[:, None]
+        tok = sampling.greedy(logits[:, -1])[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)

@@ -1,0 +1,359 @@
+"""Compile-once serve runtime: chunked prefill interleaved with decode.
+
+``ServeRuntime`` is the mechanism half of the continuous-serving stack
+(the policy half is ``serve.scheduler.ContinuousScheduler``, which emits
+typed plans — admit / prefill-chunk / decode / free — that the runtime
+executes against the device).  It owns the paged cache pytree, the
+host-side ``KVPool`` and a small set of jitted, shape-stable step
+functions, so steady-state serving compiles a fixed number of programs
+up front instead of once per prompt length:
+
+  * **decode step** — the whole N_mux × B grid advances one token:
+    (NB, 1) input tokens, a (B,) per-row position vector and the
+    per-stream sampling vectors go in, the (NB,) sampled tokens come
+    out.  Compiles exactly once (an all-greedy fast-path variant skips
+    the sampler's full-vocab sort, so a greedy workload never pays for
+    sampling machinery; a mixed workload compiles both, still a fixed
+    set); sampling happens on device so logits never cross back to the
+    host.
+  * **prefill-chunk step, one per shape bucket** — a joining row's
+    prompt is split into fixed-size chunks written through the paged
+    path (``engine.prefill_chunk``): the chunk's KV is scattered into
+    the row's blocks mid-sequence and its queries attend causally over
+    previously written blocks.  Chunks are padded to power-of-two
+    buckets (padded positions route to the trash block and are fully
+    masked), so the step compiles once per bucket.  Row index, start
+    offset and valid length are traced scalars.
+
+A joining row advances one chunk per engine step while live rows keep
+decoding — admission never stalls the grid behind a long prompt.  Cache
+buffers are donated to the jitted steps on accelerator backends (XLA
+updates the pool in place; CPU does not implement donation, so it is
+skipped there to avoid per-step warnings).
+
+Pool pressure flows runtime -> scheduler: an admission that cannot get
+blocks is rolled back (``cancel_admit``) and retried after rows drain; a
+row whose mid-decode block append exhausts the pool is preempted
+(``preempt_row`` — blocks freed, requests requeued and later resumed
+from prompt + generated-so-far).  Chunked prefill requires position-wise
+mux (gaussian) and attention-only block patterns — bucket padding would
+corrupt recurrent (RG-LRU / RWKV) state — and falls back to blocking
+(whole-prompt) prefill otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve import sampling
+from repro.serve.engine import (ServeConfig, init_cache, make_pool, prefill,
+                                prefill_chunk, decode_step,
+                                set_block_tables, reset_blocks)
+from repro.serve.kvpool import PoolExhausted
+from repro.serve.scheduler import ContinuousScheduler
+
+MIN_BUCKET = 4
+
+
+def chunk_buckets(chunk: int, min_bucket: int = MIN_BUCKET):
+    """Shape buckets for chunked prefill: powers of two up to ``chunk``
+    (the last chunk of a prompt is padded up to the smallest fitting
+    bucket; full chunks use ``chunk`` itself)."""
+    b, out = min_bucket, []
+    while b < chunk:
+        out.append(b)
+        b *= 2
+    out.append(chunk)
+    return out
+
+
+class ServeRuntime:
+    """Plan-executing serve runtime over the paged KV pool.
+
+    params/sc: model parameters and a ``ServeConfig`` with
+    ``cache_layout='paged'``.  backbone_rows: B rows of the N_mux × B
+    grid.  chunk: prefill chunk size in tokens (None = blocking prefill:
+    a joining row's whole prompt is prefilled in one eager call — the
+    pre-runtime behaviour, kept as the measured baseline).
+    default_sampling: ``SamplingParams`` for requests that don't carry
+    their own (None = greedy).
+    """
+
+    def __init__(self, params, sc: ServeConfig, backbone_rows: int, *,
+                 chunk: int | None = 32, pad_id: int = 0,
+                 default_sampling=None, on_prefill=None,
+                 use_kernels: bool = False):
+        if sc.cache_layout != "paged":
+            raise ValueError("ServeRuntime requires cache_layout='paged'")
+        if sc.kind != "lm":
+            raise NotImplementedError(
+                "continuous serving supports decoder-only LM families")
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"chunk must be >= 1 (or None for blocking "
+                             f"prefill), got {chunk}")
+        blocks = tuple(sc.cfg.block_pattern) + tuple(sc.cfg.tail_blocks)
+        if chunk is not None and (
+                any(b not in ("attn", "local") for b in blocks)
+                or (sc.mux.enabled and sc.mux.mux_kind != "gaussian")):
+            # bucket padding runs pad tokens through recurrent state /
+            # sequence-contextual mux — not exact; use blocking prefill
+            chunk = None
+        self.params = params
+        self.sc = sc
+        self.n_mux = max(sc.mux.n, 1)
+        self.nrows = backbone_rows
+        self.nb = self.n_mux * backbone_rows
+        self.chunk = chunk
+        self.buckets = chunk_buckets(chunk) if chunk is not None else []
+        self.pad_id = pad_id
+        self.default_sampling = default_sampling
+        self.on_prefill = on_prefill
+        self.use_kernels = use_kernels
+
+        self.sched = ContinuousScheduler(n_mux=self.n_mux,
+                                         backbone_batch=backbone_rows,
+                                         max_len=sc.capacity)
+        self.pool = make_pool(sc, self.nb)
+        self.cache = init_cache(sc, self.nb)
+        self.row_len: dict[int, int] = {}      # rows holding blocks
+        self.row_tokens: dict[int, np.ndarray] = {}
+        self.next_tok = np.full((self.n_mux, backbone_rows), pad_id,
+                                np.int32)
+        self.engine_steps = 0
+        self.trace_counts: dict[str, int] = {}
+        # prefill_mode reflects what actually runs — "blocking" when the
+        # recurrent/contextual-mux fallback above overrode chunk
+        self.stats = {"prefill_tokens": 0, "prefill_events": 0,
+                      "prefill_compute_tokens": 0, "decode_steps": 0,
+                      "prefill_log": [], "slot_util": [], "cache_util": [],
+                      "completed": self.sched.completed, "pool": self.pool,
+                      "trace_counts": self.trace_counts,
+                      "prefill_mode": ("chunked" if chunk is not None
+                                       else "blocking")}
+        # donation: the cache pytree (arg 1) is consumed and returned by
+        # every step — in-place on TPU/GPU, skipped on CPU (unsupported)
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=donate)
+        self._decode_greedy_jit = jax.jit(self._decode_greedy_impl,
+                                          donate_argnums=donate)
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
+
+    # -- jitted step bodies (traced once per shape signature) --------------
+    def _traced(self, key: str):
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    def _decode_impl(self, params, cache, tokens, pos, temps, top_k,
+                     top_p, seeds, steps):
+        self._traced("decode_sampled")
+        logits, cache = decode_step(params, self.sc, cache, tokens, pos)
+        toks = sampling.sample(logits[:, 0], temps, top_k, top_p, seeds,
+                               steps)
+        return toks, cache
+
+    def _decode_greedy_impl(self, params, cache, tokens, pos):
+        # the all-greedy fast path: skips the sampler's full-vocab sort
+        # (temperature etc. are traced vectors in _decode_impl, so XLA
+        # cannot eliminate it even when every stream is greedy)
+        self._traced("decode")
+        logits, cache = decode_step(params, self.sc, cache, tokens, pos)
+        return sampling.greedy(logits[:, 0]), cache
+
+    def _chunk_impl(self, params, cache, tokens, row, start, length,
+                    temps, top_k, top_p, seeds, steps):
+        self._traced(f"prefill_{tokens.shape[1]}")
+        logits, cache = prefill_chunk(params, self.sc, cache, tokens,
+                                      rows=row[None], start=start,
+                                      length=length,
+                                      use_kernels=self.use_kernels)
+        toks = sampling.sample(logits, temps, top_k, top_p, seeds, steps)
+        return toks, cache
+
+    # -- per-stream sampling vectors --------------------------------------
+    def _sampling_row(self, j: int):
+        reqs = [self.sched.slots[j][i].request for i in range(self.n_mux)]
+        arr = sampling.params_arrays(
+            [(r.sampling or self.default_sampling) if r is not None
+             else None for r in reqs])
+        steps = np.asarray([len(r.output) if r is not None else 0
+                            for r in reqs], np.int32)
+        return arr, steps
+
+    def _grid_has_sampling(self) -> bool:
+        for row in self.sched.slots:
+            for s in row:
+                if s.request is not None:
+                    sp = s.request.sampling or self.default_sampling
+                    if sp is not None and sp.temperature > 0:
+                        return True
+        return False
+
+    def _sampling_grid(self):
+        temps = np.zeros((self.nb,), np.float32)
+        top_k = np.zeros((self.nb,), np.int32)
+        top_p = np.ones((self.nb,), np.float32)
+        seeds = np.zeros((self.nb,), np.int32)
+        steps = np.zeros((self.nb,), np.int32)
+        for i in range(self.n_mux):
+            for j in range(self.nrows):
+                r = self.sched.slots[j][i].request
+                if r is None:
+                    continue
+                sp = r.sampling or self.default_sampling
+                idx = i * self.nrows + j
+                if sp is not None:
+                    temps[idx] = sp.temperature
+                    top_k[idx] = sp.top_k
+                    top_p[idx] = sp.top_p
+                    seeds[idx] = sp.seed
+                steps[idx] = len(r.output)
+        return temps, top_k, top_p, seeds, steps
+
+    # -- plan execution ----------------------------------------------------
+    def submit(self, request):
+        self.sched.submit(request)
+
+    def has_work(self) -> bool:
+        return bool(self.sched.queue) or self.sched.n_active > 0
+
+    def step(self):
+        """One engine step: execute this step's plans — admissions, one
+        prefill chunk per joining row, one decode over the grid."""
+        for plan in self.sched.plan_admissions(self.pad_id):
+            self._exec_admit(plan)
+        for plan in self.sched.plan_chunks(self.chunk):
+            self._exec_chunk(plan)
+        self._exec_frees()                 # e.g. max_new=1 done at prefill
+        dp = self.sched.plan_decode()
+        rows = [j for j in dp.rows if j in self.row_len]
+        if rows:
+            self._exec_decode(rows)
+            self._exec_frees()
+        self.engine_steps += 1
+
+    def _exec_admit(self, plan):
+        try:
+            blocks = self.pool.allocate(plan.row, plan.total)
+        except PoolExhausted:
+            # backpressure: roll the group back and retry once blocks
+            # free up; later groups still get their shot
+            self.sched.cancel_admit(plan)
+            if self.pool.n_used_blocks == 0:
+                raise PoolExhausted(
+                    f"request group of {plan.total} tokens cannot fit "
+                    f"an empty pool (num_blocks={self.pool.num_blocks}, "
+                    f"block_size={self.pool.block_size}, per-seq cap "
+                    f"{self.pool.max_blocks_per_seq})")
+            return
+        self.row_len[plan.row] = plan.total
+        self.row_tokens[plan.row] = np.asarray(plan.tokens, np.int32)
+        self.cache = reset_blocks(self.cache, blocks)
+        self.cache = set_block_tables(
+            self.cache, self.pool.table_array(range(self.nrows)))
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _exec_chunk(self, plan):
+        j = plan.row
+        toks = self.row_tokens[j][:, plan.start:plan.start + plan.length]
+        arr, steps = self._sampling_row(j)
+        if self.chunk is None:
+            # blocking prefill: whole prompt, eager, fresh-KV attention
+            compute = plan.length
+            logits, self.cache = prefill(
+                self.params, self.sc, self.cache,
+                jnp.asarray(self.row_tokens[j]), rows=[j])
+            out = sampling.sample(logits, arr["temperature"], arr["top_k"],
+                                  arr["top_p"], arr["seed"], steps)
+        else:
+            compute = self._bucket(plan.length)
+            buf = np.full((self.n_mux, compute), self.pad_id, np.int32)
+            buf[:, :plan.length] = toks
+            out, self.cache = self._chunk_jit(
+                self.params, self.cache, buf, np.int32(j),
+                np.int32(plan.start), np.int32(plan.length),
+                arr["temperature"], arr["top_k"], arr["top_p"],
+                arr["seed"], steps)
+        self.stats["prefill_tokens"] += plan.length
+        self.stats["prefill_compute_tokens"] += compute
+        self.stats["prefill_events"] += 1
+        self.stats["prefill_log"].append(((j,), plan.length))
+        if self.on_prefill is not None:
+            self.on_prefill((j,), plan.length)
+        done = self.sched.chunk_done(j, plan.length)
+        if plan.last:
+            assert done
+            first = np.asarray(out)
+            self.sched.record_row_tokens(j, first)
+            self.next_tok[:, j] = first
+
+    def _clear_dead_slots(self):
+        for j in range(self.nrows):
+            if j in self.sched.prefill_progress:
+                self.next_tok[:, j] = self.pad_id
+                continue
+            for i in range(self.n_mux):
+                if self.sched.slots[j][i].request is None:
+                    self.next_tok[i, j] = self.pad_id
+
+    def _exec_decode(self, rows):
+        pos_vec = np.full((self.nrows,), -1, np.int32)
+        fresh, preempt = [], []
+        for j in rows:
+            try:
+                fresh += self.pool.append(j)    # reserve the new slot
+            except PoolExhausted:
+                preempt.append(j)
+                continue
+            pos_vec[j] = self.row_len[j]
+        # a row that outgrows the pool while it is the SOLE user can
+        # never be served (requeueing would thrash forever); with
+        # siblings, preempted rows simply retry after drains
+        if preempt and len(self.row_len) == 1:
+            raise PoolExhausted(
+                "a single row outgrew the whole pool "
+                f"(num_blocks={self.pool.num_blocks}, block_size="
+                f"{self.pool.block_size}) — it can never be served")
+        for j in preempt:
+            self.sched.preempt_row(j)
+            self.pool.free(j)
+            del self.row_len[j]
+            del self.row_tokens[j]
+        if fresh:
+            self.cache = reset_blocks(self.cache, fresh)
+        if fresh or preempt:
+            self.cache = set_block_tables(
+                self.cache, self.pool.table_array(range(self.nrows)))
+        rows = [j for j in rows if j not in preempt]
+        if not rows:
+            return
+        self._clear_dead_slots()
+        toks_in = self.next_tok.reshape(-1)[:, None]
+        if self._grid_has_sampling():
+            temps, top_k, top_p, seeds, steps = self._sampling_grid()
+            out, self.cache = self._decode_jit(
+                self.params, self.cache, toks_in, pos_vec, temps, top_k,
+                top_p, seeds, steps)
+        else:
+            out, self.cache = self._decode_greedy_jit(
+                self.params, self.cache, toks_in, pos_vec)
+        grid = np.asarray(out).reshape(self.n_mux, self.nrows)
+        for j in rows:
+            self.sched.record_row_tokens(j, grid[:, j])
+            self.row_len[j] += 1
+        self.next_tok = grid.copy()
+        self.stats["decode_steps"] += 1
+        self.stats["slot_util"].append(self.sched.utilization())
+        self.stats["cache_util"].append(self.pool.utilization())
+
+    def _exec_frees(self):
+        for plan in self.sched.plan_frees():
+            if plan.row in self.row_len:
+                self.pool.free(plan.row)
+                del self.row_len[plan.row]
+                del self.row_tokens[plan.row]

@@ -1,0 +1,110 @@
+"""Batched per-stream sampling for the serve stack.
+
+One vectorized ``sample`` replaces the argmaxes that used to be scattered
+across the serve loop: every stream in the N_mux × B grid carries its own
+``SamplingParams`` (greedy / temperature / top-k / top-p with a
+per-request seed), and the whole grid is sampled in one jit-safe call —
+inside the runtime's jitted decode step only the (S,) token vector
+crosses back to the host, never the (S, V) logits.
+
+Determinism: stream s's token at generation index t is a pure function of
+(logits, params_s, seed_s, t) — the PRNG key is
+``fold_in(PRNGKey(seed_s), t)`` — so a preempted request that re-enters
+the grid resumes its sample sequence exactly (the serve loop re-prefills
+prompt + generated-so-far and continues at the same t).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy.
+
+    temperature <= 0 selects greedy decoding (top_k / top_p / seed are
+    ignored).  top_k == 0 disables the top-k filter; top_p == 1.0
+    disables the nucleus filter.  Filters compose: top-k first, then
+    top-p over the surviving mass (the usual order).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def params_arrays(params_list):
+    """Stack per-stream SamplingParams into the (S,) vectors ``sample``
+    takes.  ``None`` entries mean greedy."""
+    ps = [p or GREEDY for p in params_list]
+    return {
+        "temperature": np.asarray([p.temperature for p in ps], np.float32),
+        "top_k": np.asarray([p.top_k for p in ps], np.int32),
+        "top_p": np.asarray([p.top_p for p in ps], np.float32),
+        "seed": np.asarray([p.seed for p in ps], np.int32),
+    }
+
+
+def greedy(logits):
+    """(..., V) -> (...,) int32 argmax (the temperature-0 fast path)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits, temperature, top_k, top_p, seed, step):
+    """Sample one token per stream.
+
+    logits: (S, V); temperature/top_p: (S,) float32; top_k/seed/step:
+    (S,) int32.  ``step`` is the stream's generation index (0 for the
+    first token out of prefill) and folds into the stream's PRNG key, so
+    fixed (seed, step) is reproducible.  Returns (S,) int32.
+
+    Rows with temperature <= 0 return the argmax exactly (no PRNG
+    involvement); as temperature -> 0+ the categorical sample converges
+    to the same argmax.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    greedy_tok = greedy(logits)
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    s_desc = jnp.sort(scaled, axis=-1)[:, ::-1]             # (S, V) desc
+
+    # top-k: drop everything strictly below the k-th largest value
+    k = jnp.clip(top_k, 1, v)
+    kth = jnp.take_along_axis(s_desc, (k - 1)[:, None], axis=-1)  # (S, 1)
+    drop = (top_k > 0)[:, None] & (scaled < kth)
+    scaled = jnp.where(drop, -jnp.inf, scaled)
+
+    # top-p over the survivors: keep the smallest prefix of the sorted
+    # distribution whose mass reaches top_p (first token always kept)
+    s_desc = jnp.where((top_k > 0)[:, None]
+                       & (jnp.arange(v)[None] >= k[:, None]),
+                       -jnp.inf, s_desc)
+    p_desc = jax.nn.softmax(s_desc, axis=-1)
+    keep = (jnp.cumsum(p_desc, axis=-1) - p_desc) < top_p[:, None]
+    thr = jnp.min(jnp.where(keep, s_desc, jnp.inf), axis=-1)      # (S,)
+    scaled = jnp.where(scaled < thr[:, None], -jnp.inf, scaled)
+
+    def one(sd, st, lg):
+        key = jax.random.fold_in(jax.random.PRNGKey(sd), st)
+        return jax.random.categorical(key, lg)
+
+    sampled = jax.vmap(one)(seed, step, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+
+def sample_params(logits, params_list, step):
+    """Convenience host-side wrapper: ``sample`` with a list of
+    SamplingParams (None = greedy) and a scalar or (S,) step."""
+    arr = params_arrays(params_list)
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32),
+                            (logits.shape[0],))
+    return sample(logits, arr["temperature"], arr["top_k"], arr["top_p"],
+                  arr["seed"], step)

@@ -23,10 +23,21 @@ paged):
 
 This module is deliberately jit-free (policy layer); the compute calls
 go through ``serve.engine``.
+
+Plan/execute split (DESIGN.md §step runtime): for the chunked-prefill
+runtime the scheduler *emits* typed plans — ``AdmitPlan`` (a new mux
+group with its padded prompt tokens), ``PrefillChunkPlan`` (advance one
+mid-prefill row by one chunk), ``DecodePlan`` (the decodable row set)
+and ``FreePlan`` (drained rows) — and ``serve.runtime.ServeRuntime``
+executes them against the device.  Pool pressure flows the other way:
+the runtime reports allocation failures back through ``cancel_admit``
+and ``preempt_row`` (block accounting is runtime knowledge, stream
+state is scheduler knowledge).
 """
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -39,6 +50,37 @@ class StreamSlot:
     prompt_len: int = 0
 
 
+@dataclass(frozen=True)
+class AdmitPlan:
+    """A newly formed mux group: allocate blocks for ``total`` tokens and
+    begin (chunked) prefill of ``tokens``."""
+    row: int
+    placed: tuple                 # ((slot, request), ...)
+    tokens: np.ndarray            # (N_mux, total) padded current sequences
+    total: int                    # padded group length
+
+
+@dataclass(frozen=True)
+class PrefillChunkPlan:
+    """Advance row ``row``'s prefill by ``length`` tokens starting at
+    ``start``; ``last`` marks the chunk that completes the prompt (its
+    final-position logits seed the row's first generated token)."""
+    row: int
+    start: int
+    length: int
+    last: bool
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    rows: tuple                   # rows that decode one token this step
+
+
+@dataclass(frozen=True)
+class FreePlan:
+    row: int                      # drained row (blocks may be returned)
+
+
 @dataclass
 class ContinuousScheduler:
     n_mux: int
@@ -48,6 +90,8 @@ class ContinuousScheduler:
     slots: list = field(init=False)
     steps: int = field(default=0, init=False)
     completed: list = field(default_factory=list, init=False)
+    # row -> [filled, total] for rows mid-way through chunked prefill
+    prefill_progress: dict = field(default_factory=dict, init=False)
 
     def __post_init__(self):
         self.slots = [[StreamSlot() for _ in range(self.n_mux)]
@@ -55,6 +99,8 @@ class ContinuousScheduler:
 
     # -- queue ------------------------------------------------------------
     def submit(self, request):
+        if getattr(request, "t_submit", None) is None:
+            request.t_submit = time.time()
         self.queue.append(request)
 
     def _free(self):
@@ -119,6 +165,74 @@ class ContinuousScheduler:
                 placements.append((j, placed))
         return placements
 
+    # -- plan emission (chunked-prefill runtime) ---------------------------
+    def plan_admissions(self, pad_id: int = 0):
+        """Emit an AdmitPlan per newly formed mux group (``admit_paged``
+        placement) and register the row for chunked prefill.  The runtime
+        must either execute each plan (allocate blocks) or roll it back
+        with ``cancel_admit``."""
+        plans = []
+        for j, placed in self.admit_paged():
+            tokens = self.row_prompts(j, pad_id)
+            self.prefill_progress[j] = [0, tokens.shape[1]]
+            plans.append(AdmitPlan(row=j, placed=tuple(placed),
+                                   tokens=tokens, total=tokens.shape[1]))
+        return plans
+
+    def cancel_admit(self, plan: AdmitPlan):
+        """Roll an admission back (pool had no blocks): un-place the
+        group and put its requests back at the head of the queue."""
+        del self.prefill_progress[plan.row]
+        for i, r in reversed(plan.placed):
+            self.slots[plan.row][i] = StreamSlot()
+            self.queue.appendleft(r)
+
+    def plan_chunks(self, chunk: int | None):
+        """One PrefillChunkPlan per mid-prefill row: the next ``chunk``
+        tokens (all remaining tokens when ``chunk`` is None — blocking
+        prefill)."""
+        plans = []
+        for j, (filled, total) in self.prefill_progress.items():
+            n = total - filled if chunk is None else min(chunk,
+                                                        total - filled)
+            plans.append(PrefillChunkPlan(row=j, start=filled, length=n,
+                                          last=filled + n >= total))
+        return plans
+
+    def chunk_done(self, row: int, n: int) -> bool:
+        """Advance a row's prefill; True when the prompt is complete
+        (the row leaves the prefill set and joins the decode grid)."""
+        st = self.prefill_progress[row]
+        st[0] += n
+        if st[0] >= st[1]:
+            del self.prefill_progress[row]
+            return True
+        return False
+
+    def plan_decode(self):
+        """Rows that decode this step: active and not mid-prefill."""
+        return DecodePlan(rows=tuple(
+            j for j in range(self.backbone_batch)
+            if j not in self.prefill_progress and self.row_active(j)))
+
+    def plan_frees(self):
+        """Drained rows (no live stream); the runtime returns their
+        blocks if it still holds any."""
+        return [FreePlan(row=j) for j in range(self.backbone_batch)
+                if j not in self.prefill_progress
+                and not self.row_active(j)]
+
+    def preempt_row(self, j: int):
+        """Requeue row j's live requests at the head of the queue (their
+        prompt + generated-so-far is re-prefilled on re-admission) and
+        clear the row's slots."""
+        self.prefill_progress.pop(j, None)
+        for i in reversed(range(self.n_mux)):
+            s = self.slots[j][i]
+            if s.request is not None:
+                self.queue.appendleft(s.request)
+            self.slots[j][i] = StreamSlot()
+
     def row_active(self, j: int) -> bool:
         return any(s.request is not None for s in self.slots[j])
 
@@ -143,11 +257,14 @@ class ContinuousScheduler:
         if s.request is None:
             return 0
         s.request.output.append(int(token))
+        if getattr(s.request, "t_first", None) is None:
+            s.request.t_first = time.time()
         s.pos += 1
         done = (len(s.request.output) >= s.request.max_new or
                 s.pos >= self.max_len)
         if done:
             s.request.done = True
+            s.request.t_done = time.time()
             self.completed.append(s.request)
             self.slots[j][i] = StreamSlot()
         return int(done)
