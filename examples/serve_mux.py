@@ -14,6 +14,15 @@ fill-drain / ring baselines or larger sweeps:
     PYTHONPATH=src python examples/serve_mux.py --continuous \
         --cache ring --requests 8        # grid re-prefill baseline
     PYTHONPATH=src python examples/serve_mux.py --paged --requests 6
+
+Mesh-sharded serving (DESIGN.md §sharded serving) runs the same paged
+runtime on a ('data', 'model') device mesh — rows and their KV block
+shards over 'data', tensor parallelism over 'model'.  On CPU, fake host
+devices stand in for a real slice:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_mux.py --paged \
+        --mesh 2,4 --requests 6
 """
 import sys
 

@@ -63,3 +63,22 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     kw.setdefault("interpret", _interpret())
     return _paged.paged_prefill_attention(q, k_pages, v_pages, block_tables,
                                           page_pos, q_start, q_len, **kw)
+
+
+def sharded_paged_attention(mesh, q, k_pages, v_pages, block_tables,
+                            page_pos, q_pos, **kw):
+    """shard_map'd paged decode kernel: per-shard pages + rebased tables
+    (collective-free; DESIGN.md §sharded serving)."""
+    kw.setdefault("interpret", _interpret())
+    return _paged.sharded_paged_attention(mesh, q, k_pages, v_pages,
+                                          block_tables, page_pos, q_pos,
+                                          **kw)
+
+
+def sharded_paged_prefill_attention(mesh, q, k_pages, v_pages,
+                                    block_tables, page_pos, q_start,
+                                    q_len, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _paged.sharded_paged_prefill_attention(
+        mesh, q, k_pages, v_pages, block_tables, page_pos, q_start, q_len,
+        **kw)

@@ -26,6 +26,18 @@ has already been scattered into the row's pages, and each query attends
 causally over every previously written block plus the chunk's own
 entries).  Queries past a row's valid length (bucket padding) are fully
 masked and produce discarded output.
+
+``sharded_paged_attention`` / ``sharded_paged_prefill_attention`` run
+the same kernels under ``shard_map`` over a mesh's 'data' axis: rows and
+the pool's blocks axis partition per shard, global block ids are rebased
+to the shard's local page segment (the ``ShardedKVPool`` row->shard
+invariant guarantees a shard's tables only reference its own segment),
+and each shard's kernel issues page DMAs only against resident pages —
+the decode path needs NO collectives (DESIGN.md §sharded serving).
+Both require the row batch to split evenly over 'data'; the serve
+runtime's decode grid always does, while its one-row prefill chunks do
+not (a single joining row lives on one shard) and fall back to the
+GSPMD-partitioned path — see the guard in ``models.blocks``.
 """
 from __future__ import annotations
 
@@ -238,3 +250,90 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     )(block_tables, q_start, q_len, qt, kt, vt, page_pos)
     return out.reshape(b, hkv, g, lq, dh).transpose(0, 3, 1, 2, 4) \
               .reshape(b, lq, h, dh)
+
+
+# ===========================================================================
+# shard_map wrappers: shard-local kernels over a (data, ...) mesh
+# ===========================================================================
+
+def _local_tables(bt, axis: str, blocks_per_shard: int):
+    """Rebase a shard's slice of the global block table to its local page
+    segment: shard s owns global ids [s*bps, (s+1)*bps) (the ShardedKVPool
+    convention), so local id = global - s*bps; -1 stays -1."""
+    off = jax.lax.axis_index(axis) * blocks_per_shard
+    return jnp.where(bt >= 0, bt - off, -1)
+
+
+def _head_axis(mesh, h: int, hkv: int):
+    """Tensor-parallel head split inside the shard_map: only when BOTH
+    head counts divide the 'model' axis (splitting q heads without their
+    kv heads would break GQA grouping); otherwise heads replicate over
+    'model' and every model shard computes all heads."""
+    m = mesh.shape.get("model", 1)
+    return "model" if m > 1 and h % m == 0 and hkv % m == 0 else None
+
+
+def _specs(mesh, axis: str, head):
+    """(q, kv-pages, bt, scalar-vector) PartitionSpecs: rows/blocks over
+    ``axis``, the head dims (q axis 2, page axis 2) over ``head``."""
+    from jax.sharding import PartitionSpec as P
+    return (P(axis, None, head, None), P(axis, None, head, None),
+            P(axis, None), P(axis))
+
+
+def sharded_paged_attention(mesh, q, k_pages, v_pages, block_tables,
+                            page_pos, q_pos, *, window=None,
+                            causal: bool = True, interpret: bool = False,
+                            axis: str = "data"):
+    """``paged_attention`` under ``shard_map``: rows (axis 0 of q /
+    block_tables / q_pos) and pool blocks (axis 0 of k_pages / v_pages /
+    page_pos) partition over the mesh's ``axis``; every shard runs the
+    single-device kernel against its local page segment with its tables
+    rebased to local ids.  Requires the ShardedKVPool invariant (a row's
+    table references only its own shard's segment) — collective-free.
+    When both head counts divide the 'model' axis, heads split over
+    'model' too (each model shard runs its own kv-head group); otherwise
+    they replicate over 'model'."""
+    from jax.experimental.shard_map import shard_map
+    n = mesh.shape[axis]
+    bps = k_pages.shape[0] // n
+    head = _head_axis(mesh, q.shape[2], k_pages.shape[2])
+
+    def local(qs, kp, vp, bt, pp, qp):
+        return paged_attention(qs, kp, vp, _local_tables(bt, axis, bps),
+                               pp, qp, window=window, causal=causal,
+                               interpret=interpret)
+
+    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(q_sp, page_sp, page_sp, bt_sp, bt_sp, vec_sp),
+        out_specs=q_sp, check_rep=False,
+    )(q, k_pages, v_pages, block_tables, page_pos, q_pos)
+
+
+def sharded_paged_prefill_attention(mesh, q, k_pages, v_pages,
+                                    block_tables, page_pos, q_start,
+                                    q_len, *, window=None,
+                                    causal: bool = True,
+                                    interpret: bool = False,
+                                    axis: str = "data"):
+    """``paged_prefill_attention`` under ``shard_map`` — same partitioning
+    and shard-locality contract (including the conditional 'model' head
+    split) as ``sharded_paged_attention``."""
+    from jax.experimental.shard_map import shard_map
+    n = mesh.shape[axis]
+    bps = k_pages.shape[0] // n
+    head = _head_axis(mesh, q.shape[2], k_pages.shape[2])
+
+    def local(qs, kp, vp, bt, pp, q0, ql):
+        return paged_prefill_attention(
+            qs, kp, vp, _local_tables(bt, axis, bps), pp, q0, ql,
+            window=window, causal=causal, interpret=interpret)
+
+    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(q_sp, page_sp, page_sp, bt_sp, bt_sp, vec_sp, vec_sp),
+        out_specs=q_sp, check_rep=False,
+    )(q, k_pages, v_pages, block_tables, page_pos, q_start, q_len)

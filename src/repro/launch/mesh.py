@@ -24,6 +24,27 @@ def make_test_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """Serve mesh (DESIGN.md §sharded serving): backbone rows, their KV
+    block tables and the paged pool's pages partition over 'data' (one
+    ``ShardedKVPool`` segment per data shard); attention heads / MLP
+    width partition over 'model' via the repo's sharding rules.  Uses
+    the first data*model local devices, so it works on any subset of an
+    8-host-device CPU run (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8``) as well as on a real slice."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"serve mesh ({data}, {model}) needs {need} devices, have "
+            f"{len(devs)} (on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})")
+    return Mesh(np.asarray(devs[:need]).reshape(data, model),
+                ("data", "model"))
+
+
 HW = {
     # TPU v5e per-chip constants used by §Roofline
     "peak_flops_bf16": 197e12,     # FLOP/s

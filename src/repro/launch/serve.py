@@ -61,12 +61,17 @@ def _sample_grid(sched, logits, default_sampling):
 
 def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                    *, pad_id: int = 0, on_prefill=None, chunk: int = 32,
-                   prefill_mode: str = "chunked", default_sampling=None):
+                   prefill_mode: str = "chunked", default_sampling=None,
+                   mesh=None, use_kernels: bool = False):
     """Continuous-batching serve loop for both cache layouts.
 
     arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams]),
     sorted by step.  Each loop iteration admits what it can, then runs
     one decode step over the grid.  Returns a stats dict.
+
+    mesh: optional ('data', 'model') mesh (``launch.mesh.make_serve_mesh``)
+    for the paged runtime — rows/pool shards over 'data', tensor
+    parallelism over 'model'; requires ``sc.n_shards`` == data-axis size.
 
     Prefill accounting (consistent across arms — DESIGN.md):
       * ``prefill_tokens``          — backbone token-positions processed
@@ -87,6 +92,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
     if sc.kind != "lm":
         raise NotImplementedError(
             "continuous serving supports decoder-only LM families")
+    if mesh is not None and sc.cache_layout != "paged":
+        raise ValueError("mesh serving requires the paged cache layout")
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid = 0
     t0 = time.time()
@@ -105,7 +112,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                           chunk=None if prefill_mode == "blocking"
                           else chunk,
                           pad_id=pad_id, default_sampling=default_sampling,
-                          on_prefill=on_prefill)
+                          on_prefill=on_prefill, mesh=mesh,
+                          use_kernels=use_kernels)
         step = 0
         while arrivals or rt.has_work():
             _pop_arrivals(step, rt.submit)
@@ -276,6 +284,17 @@ def main(argv=None):
                          "decode, or prefill whole prompts at admission")
     ap.add_argument("--chunk", type=int, default=32,
                     help="paged chunked prefill: tokens per chunk")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="paged continuous serving on a (data, model) "
+                         "device mesh, e.g. --mesh 2,4: rows + KV block "
+                         "shards over 'data', tensor parallelism over "
+                         "'model' (CPU: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="paged continuous serving: route decode/chunk "
+                         "attention through the Pallas paged kernels "
+                         "(with --mesh: the shard_map'd shard-local "
+                         "decode kernel; interpret mode off-TPU)")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous: one request arrives every K steps")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -293,11 +312,23 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
     params = cls.init(key, cfg, mux)
+    mesh = None
+    n_shards = 1
+    if args.mesh is not None:
+        if not (args.continuous and args.cache == "paged"):
+            ap.error("--mesh requires --continuous --cache paged")
+        from repro.launch.mesh import make_serve_mesh
+        try:
+            data, model = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error("--mesh expects DATA,MODEL, e.g. --mesh 2,4")
+        mesh = make_serve_mesh(data, model)
+        n_shards = data
     sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
                      capacity=args.prompt_len + args.new_tokens + 8,
                      dtype=jnp.float32,
                      cache_layout=args.cache if args.continuous else "ring",
-                     block_size=args.block_size)
+                     block_size=args.block_size, n_shards=n_shards)
     default_sampling = None
     if args.temperature > 0:
         default_sampling = sampling.SamplingParams(
@@ -321,13 +352,16 @@ def main(argv=None):
              args.new_tokens, sp))
     stats = run_continuous(params, sc, args.backbone_batch, arrivals,
                            chunk=args.chunk, prefill_mode=args.prefill,
-                           default_sampling=default_sampling)
+                           default_sampling=default_sampling, mesh=mesh,
+                           use_kernels=args.use_kernels)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
     # report the mode that actually ran (the runtime falls back to
     # blocking for recurrent blocks / contextual mux)
     mode = (f"paged/{stats['prefill_mode']}" if sc.cache_layout == "paged"
             else "ring")
+    if mesh is not None:
+        mode += f"/mesh{tuple(mesh.devices.shape)}"
     print(f"continuous[{mode}] served {done} requests "
           f"({stats['generated_tokens']} tokens) in {stats['wall']:.1f}s  "
           f"(mux N={mux.n}, rows {args.backbone_batch}; "

@@ -405,18 +405,33 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
 
     q_offset = ctx.get("q_offset", 0)
     paged = bool(cache) and "bt" in cache
-    if cache and l == 1:
-        # decode: attend over the cache (current token already written)
+    if cache and l == 1 and ctx.get("rows") is None:
+        # decode: attend over the cache (current token already written).
+        # A row-subset prefill (ctx['rows']) of a 1-token prompt is NOT
+        # a decode — its batch maps to a block-table subset and its
+        # attention runs over the fresh K/V in the else-branch below
         if paged:
             from repro.serve.kvpool import paged_write, paged_view
             posm = _paged_positions(ctx, b, l)                  # (B, 1)
-            cache = paged_write(cache, k, v, posm)
+            cache = paged_write(cache, k, v, posm, trash=ctx.get("trash"))
             if ctx.get("use_kernels") and cfg.logit_softcap is None:
                 from repro.kernels import ops as kops
-                o = kops.paged_attention(
-                    q, cache["kp"], cache["vp"], cache["bt"],
-                    cache["ppos"], posm[:, 0], window=window,
-                    causal=cfg.causal)
+                mesh = ctx.get("mesh")
+                if (mesh is not None and mesh.shape.get("data", 1) > 1
+                        and cache["bt"].shape[0] % mesh.shape["data"] == 0):
+                    # shard_map: each data shard runs the kernel over its
+                    # resident pages only (block tables are shard-local
+                    # by the ShardedKVPool invariant) — no cross-device
+                    # page gathers on the decode path
+                    o = kops.sharded_paged_attention(
+                        mesh, q, cache["kp"], cache["vp"], cache["bt"],
+                        cache["ppos"], posm[:, 0], window=window,
+                        causal=cfg.causal)
+                else:
+                    o = kops.paged_attention(
+                        q, cache["kp"], cache["vp"], cache["bt"],
+                        cache["ppos"], posm[:, 0], window=window,
+                        causal=cfg.causal)
             else:
                 kc, vc, kvpos = paged_view(cache)
                 mask = make_attention_mask(
@@ -449,14 +464,28 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
         rows = ctx.get("rows")
         bt = cache["bt"] if rows is None else cache["bt"][rows]
         posm = _paged_positions(ctx, b, l)                  # (B, L)
-        cache = paged_write(cache, k, v, posm, block_tables=bt)
+        cache = paged_write(cache, k, v, posm, block_tables=bt,
+                            trash=ctx.get("trash"))
         if ctx.get("use_kernels") and cfg.logit_softcap is None:
             from repro.kernels import ops as kops
             q_start = posm[:, 0]                            # -1 iff inactive
             q_len = (posm >= 0).sum(-1)
-            o = kops.paged_prefill_attention(
-                q, cache["kp"], cache["vp"], bt, cache["ppos"],
-                q_start, q_len, window=window, causal=cfg.causal)
+            mesh = ctx.get("mesh")
+            # shard_map only for FULL-GRID chunk batches: a rows= subset
+            # has no guaranteed row->shard alignment (shard_map would
+            # rebase a row's block ids against the wrong shard's offset
+            # and silently mask its context), so subsets always take the
+            # GSPMD-partitioned kernel below
+            if (mesh is not None and mesh.shape.get("data", 1) > 1
+                    and rows is None
+                    and bt.shape[0] % mesh.shape["data"] == 0):
+                o = kops.sharded_paged_prefill_attention(
+                    mesh, q, cache["kp"], cache["vp"], bt, cache["ppos"],
+                    q_start, q_len, window=window, causal=cfg.causal)
+            else:
+                o = kops.paged_prefill_attention(
+                    q, cache["kp"], cache["vp"], bt, cache["ppos"],
+                    q_start, q_len, window=window, causal=cfg.causal)
         else:
             kc, vc, kvpos = paged_view({**cache, "bt": bt})
             mask = make_attention_mask(
@@ -475,7 +504,8 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
             rows = ctx.get("rows")
             bt = cache["bt"] if rows is None else cache["bt"][rows]
             posm = _paged_positions(ctx, b, l)
-            cache = paged_write(cache, k, v, posm, block_tables=bt)
+            cache = paged_write(cache, k, v, posm, block_tables=bt,
+                                trash=ctx.get("trash"))
         elif cache:
             # single-shot prefill: cache is write-only; attention runs over
             # the fresh K/V (correct for any window / capacity relation).

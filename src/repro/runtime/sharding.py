@@ -169,6 +169,15 @@ def cache_specs(cache, mesh: Mesh):
       h/shift_* (…, B, W)          — batch on DP; W on model
       conv      (…, B, taps, W)    — batch on DP; W on model
       pos/idx                      — replicated
+
+    Paged layout (serve.kvpool pages; DESIGN.md §sharded serving —
+    blocks segment over the data shards exactly as ``ShardedKVPool``
+    hands them out, so each shard's block tables reference only its own
+    resident pages):
+
+      kp/vp (…, P, BS, Hkv, hd)    — blocks on DP; Hkv (else hd) on model
+      ppos  (…, P, BS)             — blocks on DP
+      bt    (…, B, MB)             — rows on DP
     """
     dp_axes = data_axes(mesh)
     dp_size = 1
@@ -201,6 +210,16 @@ def cache_specs(cache, mesh: Mesh):
             spec[x.ndim - 3] = dp_for(x.ndim - 3)
             if _fits(x.shape[x.ndim - 1], mesh, "model"):
                 spec[x.ndim - 1] = "model"
+        elif name in ("kp", "vp"):
+            spec[x.ndim - 4] = dp_for(x.ndim - 4)
+            if _fits(x.shape[x.ndim - 2], mesh, "model"):
+                spec[x.ndim - 2] = "model"
+            elif _fits(x.shape[x.ndim - 1], mesh, "model"):
+                spec[x.ndim - 1] = "model"
+        elif name == "ppos":
+            spec[x.ndim - 2] = dp_for(x.ndim - 2)
+        elif name == "bt":
+            spec[x.ndim - 2] = dp_for(x.ndim - 2)
         return P(*spec)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)

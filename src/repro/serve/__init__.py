@@ -24,6 +24,15 @@ returns its blocks to the pool.  Token decisions go through
 ``launch.serve --continuous --cache paged`` wires this end to end; the
 lower-level ``prefill(..., rows=[j])`` / ``prefill_chunk`` /
 ``decode_step`` engine calls remain available for custom loops.
+
+Mesh-sharded serving (DESIGN.md §sharded serving): the same runtime on
+a ('data', 'model') mesh — rows and their KV block segments over 'data'
+(``ShardedKVPool``: per-shard free lists + trash blocks), heads/MLP
+width over 'model', compile counts unchanged:
+
+    mesh = make_serve_mesh(data=2, model=4)
+    sc = ServeConfig(..., cache_layout="paged", n_shards=2)
+    rt = ServeRuntime(params, sc, backbone_rows, mesh=mesh)
 """
 from repro.serve.engine import (
     ServeConfig, init_cache, prefill, prefill_chunk, decode_step,
@@ -31,7 +40,8 @@ from repro.serve.engine import (
     reset_blocks,
 )
 from repro.serve.batcher import MuxBatcher, Request
-from repro.serve.kvpool import KVPool, PoolError, PoolExhausted
+from repro.serve.kvpool import (KVPool, ShardedKVPool, PoolError,
+                                PoolExhausted)
 from repro.serve import sampling
 from repro.serve.sampling import SamplingParams
 from repro.serve.runtime import ServeRuntime

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from repro.core import MuxSpec
 from repro.models import TransformerLM, EncDecLM, VLM
 from repro.models.config import ModelConfig
-from repro.serve.kvpool import KVPool, blocks_for
+from repro.serve.kvpool import KVPool, ShardedKVPool, blocks_for
 
 
 def backbone_batch(global_batch: int, mux: MuxSpec) -> int:
@@ -51,6 +51,8 @@ class ServeConfig:
     cache_layout: str = "ring"      # ring | paged
     block_size: int = 16            # paged: tokens per block
     num_blocks: int | None = None   # paged: pool size (default: worst case)
+    n_shards: int = 1               # paged: data-shard count (mesh serving);
+                                    # rows and pool blocks segment per shard
 
     @property
     def max_blocks_per_seq(self) -> int:
@@ -58,15 +60,30 @@ class ServeConfig:
 
     def pool_blocks(self, global_batch: int) -> int:
         """Pool size: explicit, or worst case (every row at capacity) +
-        the reserved trash block."""
+        one reserved trash block per shard."""
         if self.num_blocks is not None:
+            if self.num_blocks % self.n_shards:
+                raise ValueError(
+                    f"num_blocks={self.num_blocks} not divisible by "
+                    f"n_shards={self.n_shards}")
             return self.num_blocks
         b = backbone_batch(global_batch, self.mux)
-        return b * self.max_blocks_per_seq + 1
+        if b % self.n_shards:
+            raise ValueError(f"backbone batch {b} not divisible by "
+                             f"n_shards={self.n_shards}")
+        return b * self.max_blocks_per_seq + self.n_shards
 
 
-def make_pool(sc: ServeConfig, global_batch: int) -> KVPool:
-    """Host-side allocator matching ``init_cache(sc, global_batch)``."""
+def make_pool(sc: ServeConfig, global_batch: int):
+    """Host-side allocator matching ``init_cache(sc, global_batch)``.
+    With ``sc.n_shards > 1`` the pool is a ``ShardedKVPool`` whose block
+    segments line up with the device pages' 'data'-axis sharding."""
+    if sc.n_shards > 1:
+        return ShardedKVPool(num_blocks=sc.pool_blocks(global_batch),
+                             block_size=sc.block_size,
+                             max_blocks_per_seq=sc.max_blocks_per_seq,
+                             n_shards=sc.n_shards,
+                             n_rows=backbone_batch(global_batch, sc.mux))
     return KVPool(num_blocks=sc.pool_blocks(global_batch),
                   block_size=sc.block_size,
                   max_blocks_per_seq=sc.max_blocks_per_seq)
@@ -124,18 +141,23 @@ def reset_blocks(cache, block_ids):
 
 
 def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None,
-            rows=None):
+            rows=None, extra_ctx=None):
     """tokens: (NB, L_prompt).  extra: patch/frame embeddings for
     vlm/encdec.  Returns (last-position logits (NB, V), cache).
 
     rows: paged layout only — backbone-row indices the (partial) batch
     maps to; the joining rows' KV is scattered into their freshly
-    allocated blocks and no other row's cache is touched."""
+    allocated blocks and no other row's cache is touched.
+    extra_ctx: extra layer-context entries (e.g. 'mesh' for sharding
+    constraints, 'trash' for per-row trash-block routing)."""
     kw = dict(mux=sc.mux, cache=cache, dtype=sc.dtype)
+    ctx = dict(extra_ctx or {})
     if rows is not None:
         if sc.cache_layout != "paged":
             raise ValueError("rows= requires the paged cache layout")
-        kw["extra_ctx"] = {"rows": jnp.asarray(rows, jnp.int32)}
+        ctx["rows"] = jnp.asarray(rows, jnp.int32)
+    if ctx:
+        kw["extra_ctx"] = ctx
     if sc.kind == "vlm":
         out = VLM.apply(params, sc.cfg, tokens, extra, **kw)
     elif sc.kind == "encdec":
@@ -146,7 +168,7 @@ def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None,
 
 
 def prefill_chunk(params, sc: ServeConfig, cache, tokens, *, rows, start,
-                  length, use_kernels: bool = False):
+                  length, use_kernels: bool = False, extra_ctx=None):
     """Chunked prefill (paged layout only): one fixed-size prompt chunk
     for the backbone rows in ``rows``.
 
@@ -166,11 +188,13 @@ def prefill_chunk(params, sc: ServeConfig, cache, tokens, *, rows, start,
             "chunked prefill supports decoder-only LM families")
     start = jnp.asarray(start, jnp.int32)
     length = jnp.asarray(length, jnp.int32)
+    ctx = dict(extra_ctx or {})
+    ctx.update({"rows": jnp.asarray(rows, jnp.int32), "chunked": True,
+                "q_end": start + length})
     out = TransformerLM.apply(
         params, sc.cfg, tokens, mux=sc.mux, cache=cache, q_offset=start,
         dtype=sc.dtype, logits_out=False, use_kernels=use_kernels,
-        extra_ctx={"rows": jnp.asarray(rows, jnp.int32), "chunked": True,
-                   "q_end": start + length})
+        extra_ctx=ctx)
     # logits only at the chunk's last valid position (dynamic under jit):
     # the bucket-padded tail positions carry garbage hidden states
     h = out["hidden"]                                        # (NB, C, D)
@@ -182,11 +206,16 @@ def prefill_chunk(params, sc: ServeConfig, cache, tokens, *, rows, start,
     return TransformerLM.logits(params, sc.cfg, h_last)[:, 0], out["cache"]
 
 
-def decode_step(params, sc: ServeConfig, cache, tokens, pos):
+def decode_step(params, sc: ServeConfig, cache, tokens, pos, *,
+                extra_ctx=None, use_kernels: bool = False):
     """One decode step.  tokens: (NB, 1); pos: static int, traced scalar,
     or — paged layout — a (B,) int32 vector of per-row positions (-1 =
-    inactive row).  Returns (logits (NB, 1, V), new cache)."""
-    kw = dict(mux=sc.mux, cache=cache, q_offset=pos, dtype=sc.dtype)
+    inactive row).  extra_ctx: extra layer-context entries ('mesh',
+    'trash').  Returns (logits (NB, 1, V), new cache)."""
+    kw = dict(mux=sc.mux, cache=cache, q_offset=pos, dtype=sc.dtype,
+              use_kernels=use_kernels)
+    if extra_ctx:
+        kw["extra_ctx"] = extra_ctx
     if sc.kind == "encdec":
         out = EncDecLM.apply(params, sc.cfg, tokens, **kw)
     elif sc.kind == "vlm":

@@ -10,6 +10,17 @@ of fixed-size *blocks* (pages) of KV entries, vLLM-style:
                      exactly one request stream; with N > 1 it is a mux
                      group whose N streams share the row's muxed KV (see
                      DESIGN.md for why muxed KV cannot be split finer).
+  * ``ShardedKVPool`` — the mesh-serving allocator (DESIGN.md §sharded
+                     serving): the global block-id space is split into
+                     ``n_shards`` contiguous segments, one per data
+                     shard, each with its own free list and its own
+                     local trash block.  Rows map to shards contiguously
+                     (row j -> shard j // (n_rows // n_shards), matching
+                     how ``NamedSharding`` partitions the block-table
+                     rows over the 'data' axis), so a row's block table
+                     only ever references pages of the device shard that
+                     owns the row — the invariant behind collective-free
+                     sharded decode.
   * device helpers — a pytree of ``(num_blocks, block_size, Hkv, Dh)``
                      pages per attention layer plus a per-slot absolute
                      position array, with functional scatter-write and
@@ -18,7 +29,10 @@ of fixed-size *blocks* (pages) of KV entries, vLLM-style:
 
 Block id 0 is reserved as the *trash block*: writes for invalid
 positions (padding, inactive rows) are routed there and its position
-entries stay -1, so they are always masked out of attention.
+entries stay -1, so they are always masked out of attention.  Under
+``ShardedKVPool`` every shard reserves its own trash (local block 0,
+global id ``shard * blocks_per_shard``) so invalid writes never cross
+shards; ``paged_write`` takes a per-row ``trash`` vector for this.
 """
 from __future__ import annotations
 
@@ -174,6 +188,147 @@ class KVPool:
             assert len(blks) <= self.max_blocks_per_seq
 
 
+@dataclass
+class ShardedKVPool:
+    """Per-shard block allocator for mesh-sharded serving.
+
+    The global id space [0, num_blocks) splits into ``n_shards``
+    contiguous segments of ``num_blocks // n_shards`` blocks; segment s
+    is owned by data shard s, whose local block 0 (global id
+    ``s * blocks_per_shard``) is that shard's trash block.  Clients are
+    backbone rows in [0, n_rows): row j lives on shard
+    ``j // (n_rows // n_shards)`` and only ever receives blocks from its
+    own segment, so block tables stay shard-local (the device pages are
+    sharded over the blocks axis on the mesh 'data' axis with exactly
+    this segmentation).  API mirrors ``KVPool``; block ids returned and
+    accepted are GLOBAL.
+    """
+    num_blocks: int
+    block_size: int
+    max_blocks_per_seq: int
+    n_shards: int
+    n_rows: int
+    _shards: list = field(init=False, repr=False)
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self.num_blocks % self.n_shards:
+            raise ValueError(
+                f"num_blocks={self.num_blocks} not divisible by "
+                f"n_shards={self.n_shards}")
+        if self.n_rows % self.n_shards:
+            raise ValueError(
+                f"n_rows={self.n_rows} not divisible by "
+                f"n_shards={self.n_shards}")
+        self._shards = [KVPool(num_blocks=self.blocks_per_shard,
+                               block_size=self.block_size,
+                               max_blocks_per_seq=self.max_blocks_per_seq)
+                        for _ in range(self.n_shards)]
+
+    # -- shard topology ----------------------------------------------------
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.num_blocks // self.n_shards
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.n_rows // self.n_shards
+
+    def shard_of(self, cid) -> int:
+        j = int(cid)
+        if not 0 <= j < self.n_rows:
+            raise PoolError(f"row {cid!r} outside [0, {self.n_rows})")
+        return j // self.rows_per_shard
+
+    def _offset(self, s: int) -> int:
+        return s * self.blocks_per_shard
+
+    def trash_for(self, cid) -> int:
+        """Global id of the trash block of ``cid``'s shard."""
+        return self._offset(self.shard_of(cid))
+
+    def trash_vector(self, clients) -> np.ndarray:
+        """(len(clients),) int32 per-row trash block ids (``paged_write``'s
+        ``trash`` argument)."""
+        return np.asarray([self.trash_for(c) for c in clients], np.int32)
+
+    # -- introspection (aggregate + per-shard) ----------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return sum(p.n_free_blocks for p in self._shards)
+
+    @property
+    def n_used_blocks(self) -> int:
+        return sum(p.n_used_blocks for p in self._shards)
+
+    def shard_used_blocks(self, cid) -> int:
+        """Used blocks on ``cid``'s OWN shard (backpressure decisions are
+        shard-local: a row can only ever wait on its own shard's drains)."""
+        return self._shards[self.shard_of(cid)].n_used_blocks
+
+    def has(self, cid) -> bool:
+        return self._shards[self.shard_of(cid)].has(cid)
+
+    def num_tokens(self, cid) -> int:
+        return self._shards[self.shard_of(cid)].num_tokens(cid)
+
+    def used_tokens(self) -> int:
+        return sum(p.used_tokens() for p in self._shards)
+
+    def utilization(self) -> float:
+        return self.used_tokens() / (
+            (self.num_blocks - self.n_shards) * self.block_size)
+
+    # -- alloc / append / free (global ids) -------------------------------
+    def allocate(self, cid, num_tokens: int = 0):
+        s = self.shard_of(cid)
+        try:
+            local = self._shards[s].allocate(cid, num_tokens)
+        except PoolExhausted as e:
+            raise PoolExhausted(f"shard {s}: {e}") from e
+        return [b + self._offset(s) for b in local]
+
+    def append(self, cid, n: int = 1) -> list:
+        s = self.shard_of(cid)
+        try:
+            local = self._shards[s].append(cid, n)
+        except PoolExhausted as e:
+            raise PoolExhausted(f"shard {s}: {e}") from e
+        return [b + self._offset(s) for b in local]
+
+    def free(self, cid):
+        self._shards[self.shard_of(cid)].free(cid)
+
+    # -- block-table views -------------------------------------------------
+    def block_table(self, cid) -> np.ndarray:
+        s = self.shard_of(cid)
+        bt = self._shards[s].block_table(cid)
+        return np.where(bt >= 0, bt + self._offset(s), bt).astype(np.int32)
+
+    def table_array(self, clients) -> np.ndarray:
+        out = np.full((len(clients), self.max_blocks_per_seq), -1, np.int32)
+        for i, cid in enumerate(clients):
+            if cid is not None and self.has(cid):
+                out[i] = self.block_table(cid)
+        return out
+
+    def check_invariants(self):
+        for s, p in enumerate(self._shards):
+            p.check_invariants()
+            # a shard's tables reference only its own segment, and never
+            # any shard's trash block
+            off = self._offset(s)
+            for cid, blks in p._tables.items():
+                assert self.shard_of(cid) == s, "row on the wrong shard"
+                for b in blks:
+                    g = b + off
+                    assert off < g < off + self.blocks_per_shard, \
+                        "block table crosses shard boundary"
+                    assert g % self.blocks_per_shard != 0, \
+                        "trash block referenced by a live table"
+
+
 # ===========================================================================
 # device-side page ops (functional, jit-safe)
 # ===========================================================================
@@ -188,13 +343,16 @@ def init_pages(num_blocks: int, block_size: int, n_kv_heads: int,
     }
 
 
-def paged_write(cache, k, v, positions, block_tables=None):
+def paged_write(cache, k, v, positions, block_tables=None, trash=None):
     """Scatter L new KV entries per row into their pages.
 
     cache: dict with kp/vp (P, BS, Hkv, Dh), ppos (P, BS) and (unless
     ``block_tables`` overrides it) bt (B, MB).  k, v: (B, L, Hkv, Dh).
     positions: (B, L) int32 absolute token positions; entries < 0 (pad
     tokens, inactive rows) are routed to the trash block and stay masked.
+    trash: trash block id — scalar or a (B,) per-row vector (sharded
+    pools route each row's invalid writes to its OWN shard's trash so
+    they never cross shards); default block 0.
     Rows own disjoint blocks (allocator invariant), so scatters never
     collide across rows.
     """
@@ -205,7 +363,10 @@ def paged_write(cache, k, v, positions, block_tables=None):
     page = jnp.take_along_axis(bt, jnp.clip(blk, 0, bt.shape[1] - 1),
                                axis=1)                       # (B, L)
     valid = in_range & (page >= 0)
-    page = jnp.where(valid, page, TRASH_BLOCK)
+    t = jnp.asarray(TRASH_BLOCK if trash is None else trash, page.dtype)
+    if t.ndim:
+        t = t[:, None]                                       # (B, 1)
+    page = jnp.where(valid, page, t)
     slot = jnp.where(valid, positions % bs, 0)
     stored = jnp.where(valid, positions, -1)
     return {**cache,

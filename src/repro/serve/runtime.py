@@ -11,11 +11,13 @@ up front instead of once per prompt length:
   * **decode step** — the whole N_mux × B grid advances one token:
     (NB, 1) input tokens, a (B,) per-row position vector and the
     per-stream sampling vectors go in, the (NB,) sampled tokens come
-    out.  Compiles exactly once (an all-greedy fast-path variant skips
-    the sampler's full-vocab sort, so a greedy workload never pays for
-    sampling machinery; a mixed workload compiles both, still a fixed
-    set); sampling happens on device so logits never cross back to the
-    host.
+    out.  Compiles exactly once: the sampling params are traced arrays
+    and the sampler's full-vocab machinery sits behind a traced
+    ``lax.cond`` (``serve.sampling.sample``), so an all-greedy grid
+    skips it at runtime while a request changing its sampling config
+    mid-stream never triggers a new trace.  Sampling happens on device
+    so logits never cross back to the host — only the token vector is
+    gathered.
   * **prefill-chunk step, one per shape bucket** — a joining row's
     prompt is split into fixed-size chunks written through the paged
     path (``engine.prefill_chunk``): the chunk's KV is scattered into
@@ -35,10 +37,23 @@ Pool pressure flows runtime -> scheduler: an admission that cannot get
 blocks is rolled back (``cancel_admit``) and retried after rows drain; a
 row whose mid-decode block append exhausts the pool is preempted
 (``preempt_row`` — blocks freed, requests requeued and later resumed
-from prompt + generated-so-far).  Chunked prefill requires position-wise
-mux (gaussian) and attention-only block patterns — bucket padding would
-corrupt recurrent (RG-LRU / RWKV) state — and falls back to blocking
-(whole-prompt) prefill otherwise.
+from prompt + generated-so-far).  Backpressure is shard-local under a
+mesh: a row only ever waits on (or is doomed by) its OWN shard's pool.
+Chunked prefill requires position-wise mux (gaussian) and attention-only
+block patterns — bucket padding would corrupt recurrent (RG-LRU / RWKV)
+state — and falls back to blocking (whole-prompt) prefill otherwise.
+
+Mesh-sharded serving (DESIGN.md §sharded serving): pass ``mesh`` (axes
+'data', 'model' — ``launch.mesh.make_serve_mesh``) and set
+``ServeConfig.n_shards`` to the 'data' axis size.  Backbone rows, their
+block tables and the pool's pages partition over 'data' (each data
+shard owns its own ``ShardedKVPool`` segment and trash block); params
+and the KV head axes partition over 'model' via the repo's sharding
+rules.  The jitted steps pin the cache's NamedShardings on both sides
+(in via committed inputs, out via ``out_shardings``), so the compile
+counters still read 1 decode program + one per prefill bucket on every
+device, and sampling runs on the devices owning each row — only the
+(NB,) token vector is gathered to host.
 """
 from __future__ import annotations
 
@@ -78,13 +93,15 @@ class ServeRuntime:
     a joining row's whole prompt is prefilled in one eager call — the
     pre-runtime behaviour, kept as the measured baseline).
     default_sampling: ``SamplingParams`` for requests that don't carry
-    their own (None = greedy).
+    their own (None = greedy).  mesh: optional ('data', 'model') device
+    mesh for sharded serving — requires ``sc.n_shards`` == the 'data'
+    axis size and ``backbone_rows`` divisible by it.
     """
 
     def __init__(self, params, sc: ServeConfig, backbone_rows: int, *,
                  chunk: int | None = 32, pad_id: int = 0,
                  default_sampling=None, on_prefill=None,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False, mesh=None):
         if sc.cache_layout != "paged":
             raise ValueError("ServeRuntime requires cache_layout='paged'")
         if sc.kind != "lm":
@@ -93,6 +110,18 @@ class ServeRuntime:
         if chunk is not None and chunk < 1:
             raise ValueError(f"chunk must be >= 1 (or None for blocking "
                              f"prefill), got {chunk}")
+        if mesh is not None:
+            data = mesh.shape.get("data", 1)
+            if sc.n_shards != data:
+                raise ValueError(
+                    f"ServeConfig.n_shards={sc.n_shards} must equal the "
+                    f"mesh 'data' axis size {data}")
+            if backbone_rows % data:
+                raise ValueError(
+                    f"backbone_rows={backbone_rows} not divisible by the "
+                    f"mesh 'data' axis size {data}")
+        elif sc.n_shards != 1:
+            raise ValueError("ServeConfig.n_shards > 1 requires a mesh")
         blocks = tuple(sc.cfg.block_pattern) + tuple(sc.cfg.tail_blocks)
         if chunk is not None and (
                 any(b not in ("attn", "local") for b in blocks)
@@ -111,12 +140,31 @@ class ServeRuntime:
         self.default_sampling = default_sampling
         self.on_prefill = on_prefill
         self.use_kernels = use_kernels
+        self.mesh = mesh
 
         self.sched = ContinuousScheduler(n_mux=self.n_mux,
                                          backbone_batch=backbone_rows,
-                                         max_len=sc.capacity)
+                                         max_len=sc.capacity,
+                                         n_shards=sc.n_shards)
         self.pool = make_pool(sc, self.nb)
         self.cache = init_cache(sc, self.nb)
+        # per-row trash-block routing (each shard's invalid writes stay
+        # on that shard; block 0 everywhere in the unsharded case)
+        self._trash = (jnp.asarray(self.pool.trash_vector(
+            range(backbone_rows))) if sc.n_shards > 1 else None)
+        self._cache_sh = None
+        if mesh is not None:
+            # pin NamedShardings on params and cache: rows/block tables/
+            # pages over 'data', heads and MLP width over 'model'.  The
+            # cache shardings are re-asserted after every host-side table
+            # edit and via out_shardings on the jitted steps, so input
+            # shardings never drift and nothing ever re-traces.
+            from repro.runtime import sharding as shard
+            self.params = params = jax.device_put(
+                params, shard.named(shard.param_specs(params, mesh), mesh))
+            self._cache_sh = shard.named(
+                shard.cache_specs(self.cache, mesh), mesh)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
         self.row_len: dict[int, int] = {}      # rows holding blocks
         self.row_tokens: dict[int, np.ndarray] = {}
         self.next_tok = np.full((self.n_mux, backbone_rows), pad_id,
@@ -135,38 +183,58 @@ class ServeRuntime:
         # donation: the cache pytree (arg 1) is consumed and returned by
         # every step — in-place on TPU/GPU, skipped on CPU (unsupported)
         donate = (1,) if jax.default_backend() != "cpu" else ()
-        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=donate)
-        self._decode_greedy_jit = jax.jit(self._decode_greedy_impl,
-                                          donate_argnums=donate)
-        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
+        jit_kw = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            # tokens come back replicated (the one host gather per step);
+            # the cache keeps its pinned shardings so the committed-input
+            # signature of the next step is identical
+            jit_kw["out_shardings"] = (NamedSharding(mesh, P()),
+                                       self._cache_sh)
+        self._decode_jit = jax.jit(self._decode_impl,
+                                   donate_argnums=donate, **jit_kw)
+        self._chunk_jit = jax.jit(self._chunk_impl,
+                                  donate_argnums=donate, **jit_kw)
 
     # -- jitted step bodies (traced once per shape signature) --------------
     def _traced(self, key: str):
         self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
 
+    def _step_ctx(self, trash):
+        """Layer-context extras shared by the jitted steps: the mesh (for
+        sharding constraints / the shard_map kernel path) and the trash
+        routing vector."""
+        ctx = {}
+        if self.mesh is not None:
+            ctx["mesh"] = self.mesh
+        if trash is not None:
+            ctx["trash"] = trash
+        return ctx
+
     def _decode_impl(self, params, cache, tokens, pos, temps, top_k,
                      top_p, seeds, steps):
-        self._traced("decode_sampled")
-        logits, cache = decode_step(params, self.sc, cache, tokens, pos)
+        # ONE decode program for greedy and sampled workloads alike: the
+        # sampling params are traced arrays, and sampling.sample gates
+        # the full-vocab machinery behind a lax.cond — a request whose
+        # sampling config changes mid-stream can never re-trace this
+        self._traced("decode")
+        logits, cache = decode_step(params, self.sc, cache, tokens, pos,
+                                    extra_ctx=self._step_ctx(self._trash),
+                                    use_kernels=self.use_kernels)
         toks = sampling.sample(logits[:, 0], temps, top_k, top_p, seeds,
                                steps)
         return toks, cache
 
-    def _decode_greedy_impl(self, params, cache, tokens, pos):
-        # the all-greedy fast path: skips the sampler's full-vocab sort
-        # (temperature etc. are traced vectors in _decode_impl, so XLA
-        # cannot eliminate it even when every stream is greedy)
-        self._traced("decode")
-        logits, cache = decode_step(params, self.sc, cache, tokens, pos)
-        return sampling.greedy(logits[:, 0]), cache
-
     def _chunk_impl(self, params, cache, tokens, row, start, length,
                     temps, top_k, top_p, seeds, steps):
         self._traced(f"prefill_{tokens.shape[1]}")
+        trash = (self._trash[row[None]] if self._trash is not None
+                 else None)
         logits, cache = prefill_chunk(params, self.sc, cache, tokens,
                                       rows=row[None], start=start,
                                       length=length,
-                                      use_kernels=self.use_kernels)
+                                      use_kernels=self.use_kernels,
+                                      extra_ctx=self._step_ctx(trash))
         toks = sampling.sample(logits, temps, top_k, top_p, seeds, steps)
         return toks, cache
 
@@ -179,15 +247,6 @@ class ServeRuntime:
         steps = np.asarray([len(r.output) if r is not None else 0
                             for r in reqs], np.int32)
         return arr, steps
-
-    def _grid_has_sampling(self) -> bool:
-        for row in self.sched.slots:
-            for s in row:
-                if s.request is not None:
-                    sp = s.request.sampling or self.default_sampling
-                    if sp is not None and sp.temperature > 0:
-                        return True
-        return False
 
     def _sampling_grid(self):
         temps = np.zeros((self.nb,), np.float32)
@@ -220,8 +279,7 @@ class ServeRuntime:
     def step(self):
         """One engine step: execute this step's plans — admissions, one
         prefill chunk per joining row, one decode over the grid."""
-        for plan in self.sched.plan_admissions(self.pad_id):
-            self._exec_admit(plan)
+        self._exec_admissions()
         for plan in self.sched.plan_chunks(self.chunk):
             self._exec_chunk(plan)
         self._exec_frees()                 # e.g. max_new=1 done at prefill
@@ -232,25 +290,75 @@ class ServeRuntime:
             self._exec_frees()
         self.engine_steps += 1
 
-    def _exec_admit(self, plan):
+    def _commit_cache(self):
+        """Re-assert the pinned NamedShardings after a host-side cache
+        edit (set_block_tables / reset_blocks build fresh arrays whose
+        sharding would otherwise drift and force a silent re-trace of
+        the jitted steps on their next call)."""
+        if self._cache_sh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_sh)
+
+    def _shard_used_blocks(self, row: int) -> int:
+        """Used blocks on ``row``'s shard (the whole pool when unsharded)
+        — backpressure verdicts are shard-local."""
+        if hasattr(self.pool, "shard_used_blocks"):
+            return self.pool.shard_used_blocks(row)
+        return self.pool.n_used_blocks
+
+    def _exec_admissions(self):
+        """Execute this step's admission plans.  A plan whose shard has
+        no blocks is rolled back (``cancel_admit``) and — under a mesh —
+        immediately re-planned with that shard excluded, so a group
+        waiting on one busy shard lands on a sibling shard with free
+        blocks instead of head-of-line blocking the queue."""
+        failed: set = set()
+        admitted = False
+        plans = self.sched.plan_admissions(self.pad_id)
+        while plans:
+            retry = False
+            for plan in plans:
+                if self._exec_admit(plan):
+                    admitted = True
+                else:
+                    failed.add(plan.shard)
+                    retry = True
+            if not retry or len(failed) >= self.sc.n_shards \
+                    or not self.sched.queue:
+                break
+            # every iteration adds at least one newly failed shard, so
+            # this terminates after <= n_shards rounds
+            plans = self.sched.plan_admissions(self.pad_id,
+                                               skip_shards=failed)
+        if admitted:
+            # one combined table install + sharding re-commit for ALL of
+            # this step's admissions (per-plan block resets already
+            # happened; rebuilding the (nrows, MB) table array and
+            # re-committing the cache pytree per plan would be redundant)
+            self.cache = set_block_tables(
+                self.cache, self.pool.table_array(range(self.nrows)))
+            self._commit_cache()
+
+    def _exec_admit(self, plan) -> bool:
         try:
             blocks = self.pool.allocate(plan.row, plan.total)
         except PoolExhausted:
             # backpressure: roll the group back and retry once blocks
-            # free up; later groups still get their shot
+            # free up; later groups still get their shot.  The verdict
+            # is shard-local: only the plan's own shard can ever free
+            # the blocks this group is waiting for.
             self.sched.cancel_admit(plan)
-            if self.pool.n_used_blocks == 0:
+            if self._shard_used_blocks(plan.row) == 0:
                 raise PoolExhausted(
                     f"request group of {plan.total} tokens cannot fit "
-                    f"an empty pool (num_blocks={self.pool.num_blocks}, "
-                    f"block_size={self.pool.block_size}, per-seq cap "
-                    f"{self.pool.max_blocks_per_seq})")
-            return
+                    f"an empty pool shard (num_blocks="
+                    f"{self.pool.num_blocks}, block_size="
+                    f"{self.pool.block_size}, shards {self.sc.n_shards}, "
+                    f"per-seq cap {self.pool.max_blocks_per_seq})")
+            return False
         self.row_len[plan.row] = plan.total
         self.row_tokens[plan.row] = np.asarray(plan.tokens, np.int32)
         self.cache = reset_blocks(self.cache, blocks)
-        self.cache = set_block_tables(
-            self.cache, self.pool.table_array(range(self.nrows)))
+        return True
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -265,9 +373,13 @@ class ServeRuntime:
         if self.chunk is None:
             # blocking prefill: whole prompt, eager, fresh-KV attention
             compute = plan.length
+            trash = (self._trash[jnp.asarray([j])]
+                     if self._trash is not None else None)
             logits, self.cache = prefill(
                 self.params, self.sc, self.cache,
-                jnp.asarray(self.row_tokens[j]), rows=[j])
+                jnp.asarray(self.row_tokens[j]), rows=[j],
+                extra_ctx=self._step_ctx(trash))
+            self._commit_cache()
             out = sampling.sample(logits, arr["temperature"], arr["top_k"],
                                   arr["top_p"], arr["seed"], steps)
         else:
@@ -301,6 +413,15 @@ class ServeRuntime:
                 if self.sched.slots[j][i].request is None:
                     self.next_tok[i, j] = self.pad_id
 
+    def _shard_mates(self, j: int) -> int:
+        """Live rows sharing ``j``'s shard (j included) — the set whose
+        drains could ever unblock j's shard."""
+        if hasattr(self.pool, "shard_of"):
+            s = self.pool.shard_of(j)
+            return sum(1 for r in self.row_len
+                       if self.pool.shard_of(r) == s)
+        return len(self.row_len)
+
     def _exec_decode(self, rows):
         pos_vec = np.full((self.nrows,), -1, np.int32)
         fresh, preempt = [], []
@@ -311,14 +432,16 @@ class ServeRuntime:
                 preempt.append(j)
                 continue
             pos_vec[j] = self.row_len[j]
-        # a row that outgrows the pool while it is the SOLE user can
-        # never be served (requeueing would thrash forever); with
-        # siblings, preempted rows simply retry after drains
-        if preempt and len(self.row_len) == 1:
-            raise PoolExhausted(
-                "a single row outgrew the whole pool "
-                f"(num_blocks={self.pool.num_blocks}, block_size="
-                f"{self.pool.block_size}) — it can never be served")
+        # a row that outgrows its shard's pool while it is the shard's
+        # SOLE user can never be served (requeueing would thrash
+        # forever); with shard-mates, preempted rows retry after drains
+        for j in preempt:
+            if self._shard_mates(j) == 1:
+                raise PoolExhausted(
+                    "a single row outgrew its whole pool shard "
+                    f"(num_blocks={self.pool.num_blocks}, block_size="
+                    f"{self.pool.block_size}, shards {self.sc.n_shards})"
+                    " — it can never be served")
         for j in preempt:
             self.sched.preempt_row(j)
             self.pool.free(j)
@@ -329,19 +452,16 @@ class ServeRuntime:
         if fresh or preempt:
             self.cache = set_block_tables(
                 self.cache, self.pool.table_array(range(self.nrows)))
+            self._commit_cache()
         rows = [j for j in rows if j not in preempt]
         if not rows:
             return
         self._clear_dead_slots()
         toks_in = self.next_tok.reshape(-1)[:, None]
-        if self._grid_has_sampling():
-            temps, top_k, top_p, seeds, steps = self._sampling_grid()
-            out, self.cache = self._decode_jit(
-                self.params, self.cache, toks_in, pos_vec, temps, top_k,
-                top_p, seeds, steps)
-        else:
-            out, self.cache = self._decode_greedy_jit(
-                self.params, self.cache, toks_in, pos_vec)
+        temps, top_k, top_p, seeds, steps = self._sampling_grid()
+        out, self.cache = self._decode_jit(
+            self.params, self.cache, toks_in, pos_vec, temps, top_k,
+            top_p, seeds, steps)
         grid = np.asarray(out).reshape(self.n_mux, self.nrows)
         for j in rows:
             self.sched.record_row_tokens(j, grid[:, j])

@@ -68,36 +68,50 @@ def sample(logits, temperature, top_k, top_p, seed, step):
     Rows with temperature <= 0 return the argmax exactly (no PRNG
     involvement); as temperature -> 0+ the categorical sample converges
     to the same argmax.
+
+    The full sampling machinery (vocab sort, nucleus scan, PRNG draws)
+    is gated behind a traced ``lax.cond`` on ``any(temperature > 0)``:
+    an all-greedy batch pays only the argmax AT RUNTIME, yet the whole
+    function stays ONE program — a request flipping its sampling config
+    mid-stream (or a greedy grid admitting its first sampled request)
+    never triggers a new trace/compile of the serve runtime's decode
+    step (regression-tested via the runtime's trace counters).
     """
     logits = logits.astype(jnp.float32)
     v = logits.shape[-1]
     greedy_tok = greedy(logits)
 
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
-    s_desc = jnp.sort(scaled, axis=-1)[:, ::-1]             # (S, V) desc
+    def _sampled(_):
+        scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+        s_desc = jnp.sort(scaled, axis=-1)[:, ::-1]         # (S, V) desc
 
-    # top-k: drop everything strictly below the k-th largest value
-    k = jnp.clip(top_k, 1, v)
-    kth = jnp.take_along_axis(s_desc, (k - 1)[:, None], axis=-1)  # (S, 1)
-    drop = (top_k > 0)[:, None] & (scaled < kth)
-    scaled = jnp.where(drop, -jnp.inf, scaled)
+        # top-k: drop everything strictly below the k-th largest value
+        k = jnp.clip(top_k, 1, v)
+        kth = jnp.take_along_axis(s_desc, (k - 1)[:, None],
+                                  axis=-1)                  # (S, 1)
+        drop = (top_k > 0)[:, None] & (scaled < kth)
+        sc = jnp.where(drop, -jnp.inf, scaled)
 
-    # top-p over the survivors: keep the smallest prefix of the sorted
-    # distribution whose mass reaches top_p (first token always kept)
-    s_desc = jnp.where((top_k > 0)[:, None]
-                       & (jnp.arange(v)[None] >= k[:, None]),
-                       -jnp.inf, s_desc)
-    p_desc = jax.nn.softmax(s_desc, axis=-1)
-    keep = (jnp.cumsum(p_desc, axis=-1) - p_desc) < top_p[:, None]
-    thr = jnp.min(jnp.where(keep, s_desc, jnp.inf), axis=-1)      # (S,)
-    scaled = jnp.where(scaled < thr[:, None], -jnp.inf, scaled)
+        # top-p over the survivors: keep the smallest prefix of the
+        # sorted distribution whose mass reaches top_p (first token
+        # always kept)
+        sd_ = jnp.where((top_k > 0)[:, None]
+                        & (jnp.arange(v)[None] >= k[:, None]),
+                        -jnp.inf, s_desc)
+        p_desc = jax.nn.softmax(sd_, axis=-1)
+        keep = (jnp.cumsum(p_desc, axis=-1) - p_desc) < top_p[:, None]
+        thr = jnp.min(jnp.where(keep, sd_, jnp.inf), axis=-1)     # (S,)
+        sc = jnp.where(sc < thr[:, None], -jnp.inf, sc)
 
-    def one(sd, st, lg):
-        key = jax.random.fold_in(jax.random.PRNGKey(sd), st)
-        return jax.random.categorical(key, lg)
+        def one(sd, st, lg):
+            key = jax.random.fold_in(jax.random.PRNGKey(sd), st)
+            return jax.random.categorical(key, lg)
 
-    sampled = jax.vmap(one)(seed, step, scaled).astype(jnp.int32)
-    return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+        sampled = jax.vmap(one)(seed, step, sc).astype(jnp.int32)
+        return jnp.where(temperature <= 0.0, greedy_tok, sampled)
+
+    return jax.lax.cond(jnp.any(temperature > 0.0), _sampled,
+                        lambda _: greedy_tok, operand=None)
 
 
 def sample_params(logits, params_list, step):

@@ -53,11 +53,15 @@ class StreamSlot:
 @dataclass(frozen=True)
 class AdmitPlan:
     """A newly formed mux group: allocate blocks for ``total`` tokens and
-    begin (chunked) prefill of ``tokens``."""
+    begin (chunked) prefill of ``tokens``.  ``shard`` is the data shard
+    owning the row under mesh serving (0 when unsharded) — the runtime's
+    allocation draws from exactly that shard's pool segment, and a
+    rollback (``cancel_admit``) touches only that shard's row."""
     row: int
     placed: tuple                 # ((slot, request), ...)
     tokens: np.ndarray            # (N_mux, total) padded current sequences
     total: int                    # padded group length
+    shard: int = 0                # owning data shard (row -> shard map)
 
 
 @dataclass(frozen=True)
@@ -86,6 +90,12 @@ class ContinuousScheduler:
     n_mux: int
     backbone_batch: int
     max_len: int
+    # data-shard count under mesh serving: rows map to shards
+    # contiguously (row j -> shard j // (backbone_batch // n_shards)),
+    # matching the device partitioning of the block tables.  Admission
+    # visits rows interleaved across shards so trickle load spreads over
+    # every shard's pool instead of piling onto shard 0.
+    n_shards: int = 1
     queue: collections.deque = field(default_factory=collections.deque)
     slots: list = field(init=False)
     steps: int = field(default=0, init=False)
@@ -94,8 +104,25 @@ class ContinuousScheduler:
     prefill_progress: dict = field(default_factory=dict, init=False)
 
     def __post_init__(self):
+        if self.n_shards < 1 or self.backbone_batch % self.n_shards:
+            raise ValueError(
+                f"backbone_batch {self.backbone_batch} not divisible by "
+                f"n_shards {self.n_shards}")
         self.slots = [[StreamSlot() for _ in range(self.n_mux)]
                       for _ in range(self.backbone_batch)]
+
+    def shard_of(self, j: int) -> int:
+        return j // (self.backbone_batch // self.n_shards)
+
+    def _admission_order(self):
+        """Row visit order for admission: plain order when unsharded;
+        round-robin across shards otherwise (row r of shard 0, row r of
+        shard 1, ... — balances per-shard pool pressure)."""
+        if self.n_shards == 1:
+            return range(self.backbone_batch)
+        rps = self.backbone_batch // self.n_shards
+        return [s * rps + r for r in range(rps)
+                for s in range(self.n_shards)]
 
     # -- queue ------------------------------------------------------------
     def submit(self, request):
@@ -127,18 +154,22 @@ class ContinuousScheduler:
             dirty_rows.add(j)
         return sorted(dirty_rows)
 
-    def admit_paged(self):
+    def admit_paged(self, skip_shards=()):
         """Row-granular admission for the paged cache layout: queued
         requests are grouped (up to N per row) into rows that are
         entirely empty.  Occupied rows — including partially drained
         ones — are NEVER touched, so admission requires no re-prefill of
-        sibling streams.  Returns [(row, [(slot, request), ...]), ...]
-        for the newly formed mux groups (each needs exactly one prefill
-        of its own prompts)."""
+        sibling streams.  skip_shards: data shards to pass over (the
+        runtime re-plans a rolled-back admission onto sibling shards
+        whose pools still have blocks).  Returns
+        [(row, [(slot, request), ...]), ...] for the newly formed mux
+        groups (each needs exactly one prefill of its own prompts)."""
         placements = []
-        for j in range(self.backbone_batch):
+        for j in self._admission_order():
             if not self.queue:
                 break
+            if self.shard_of(j) in skip_shards:
+                continue
             if any(s.request is not None for s in self.slots[j]):
                 continue
             placed = []
@@ -166,22 +197,28 @@ class ContinuousScheduler:
         return placements
 
     # -- plan emission (chunked-prefill runtime) ---------------------------
-    def plan_admissions(self, pad_id: int = 0):
+    def plan_admissions(self, pad_id: int = 0, skip_shards=()):
         """Emit an AdmitPlan per newly formed mux group (``admit_paged``
         placement) and register the row for chunked prefill.  The runtime
         must either execute each plan (allocate blocks) or roll it back
-        with ``cancel_admit``."""
+        with ``cancel_admit`` — and may re-plan with the failed shard in
+        ``skip_shards`` so the rolled-back group lands on a sibling
+        shard with free blocks instead of queue-blocking."""
         plans = []
-        for j, placed in self.admit_paged():
+        for j, placed in self.admit_paged(skip_shards):
             tokens = self.row_prompts(j, pad_id)
             self.prefill_progress[j] = [0, tokens.shape[1]]
             plans.append(AdmitPlan(row=j, placed=tuple(placed),
-                                   tokens=tokens, total=tokens.shape[1]))
+                                   tokens=tokens, total=tokens.shape[1],
+                                   shard=self.shard_of(j)))
         return plans
 
     def cancel_admit(self, plan: AdmitPlan):
         """Roll an admission back (pool had no blocks): un-place the
-        group and put its requests back at the head of the queue."""
+        group and put its requests back at the head of the queue.
+        Shard-local: only ``plan.row``'s slots (on ``plan.shard``) and
+        the global queue head are touched — rows on other shards never
+        see the rollback."""
         del self.prefill_progress[plan.row]
         for i, r in reversed(plan.placed):
             self.slots[plan.row][i] = StreamSlot()
@@ -225,7 +262,8 @@ class ContinuousScheduler:
     def preempt_row(self, j: int):
         """Requeue row j's live requests at the head of the queue (their
         prompt + generated-so-far is re-prefilled on re-admission) and
-        clear the row's slots."""
+        clear the row's slots.  Shard-local like ``cancel_admit``: only
+        row j's slots change; sibling shards keep decoding untouched."""
         self.prefill_progress.pop(j, None)
         for i in reversed(range(self.n_mux)):
             s = self.slots[j][i]

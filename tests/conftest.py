@@ -2,8 +2,15 @@ import os
 import sys
 
 # tests must see the real (single) CPU device — only launch/dryrun.py may
-# request the 512 placeholder devices
-os.environ.pop("XLA_FLAGS", None)
+# request the 512 placeholder devices.  Exception: the mesh/sharded-serve
+# tests need a small pool of fake host devices; the devices=N CI job opts
+# in via REPRO_TEST_DEVICES (tests skip themselves when it is unset).
+_n_dev = os.environ.get("REPRO_TEST_DEVICES", "")
+if _n_dev.isdigit() and int(_n_dev) > 1:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={_n_dev}"
+else:
+    os.environ.pop("XLA_FLAGS", None)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -255,6 +255,86 @@ def test_runtime_chunked_interleaves_decode_with_prefill():
     assert stats["decode_steps"] >= 7
 
 
+def test_blocking_prefill_one_token_prompt_exact():
+    """Regression (found by the churn fuzz): a 1-token prompt under
+    blocking prefill used to fall into apply_attention's l == 1 decode
+    branch with a row-subset block table against the full-grid cache —
+    a shape error.  Row-subset prefills must never be treated as decode."""
+    cfg, params, sc = make_model(1, capacity=32)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(4, cfg.vocab_size, size=(l,)).astype(np.int32)
+               for l in (1, 6, 1)]
+    arrivals = [(i, p, 4) for i, p in enumerate(prompts)]
+    for mode in ("blocking", "chunked"):
+        stats = run_continuous(params, sc,
+                               2, [(t, p.copy(), m) for t, p, m in arrivals],
+                               chunk=4, prefill_mode=mode)
+        assert len(stats["completed"]) == 3
+        by_uid = {r.uid: r.output for r in stats["completed"]}
+        for i, p in enumerate(prompts):
+            want = greedy_generate(params, sc, jnp.asarray(p)[None],
+                                   steps=4)[0]
+            np.testing.assert_array_equal(np.asarray(by_uid[i]),
+                                          np.asarray(want))
+
+
+def test_runtime_decode_never_retraces_on_sampling_change():
+    """Regression: the decode step is ONE program whose sampling params
+    are traced arrays (the sampler's full-vocab machinery sits behind a
+    traced lax.cond) — a request flipping its sampling config mid-stream,
+    or a greedy grid admitting its first sampled request, must not
+    trigger a new trace."""
+    from repro.serve import Request, SamplingParams
+    from repro.serve.runtime import ServeRuntime
+    cfg, params, sc = make_model(1, capacity=48)
+    rt = ServeRuntime(params, sc, 2, chunk=4)
+    rng = np.random.default_rng(7)
+    r0 = Request(uid=0, prompt=[int(t) for t in
+                                rng.integers(4, cfg.vocab_size, 6)],
+                 max_new=10)                          # greedy
+    rt.submit(r0)
+    steps = 0
+    while rt.has_work():
+        rt.step()
+        steps += 1
+        if steps == 4:
+            # flip the live request to sampled mid-stream...
+            r0.sampling = SamplingParams(temperature=0.9, top_k=5, seed=1)
+        if steps == 6:
+            # ...then change the config again, and admit a second,
+            # sampled request next to it
+            r0.sampling = SamplingParams(temperature=0.7, top_p=0.8,
+                                         seed=2)
+            rt.submit(Request(
+                uid=1, prompt=[int(t) for t in
+                               rng.integers(4, cfg.vocab_size, 5)],
+                max_new=3,
+                sampling=SamplingParams(temperature=1.0, seed=3)))
+    assert len(rt.stats["completed"]) == 2
+    counts = rt.trace_counts
+    assert counts["decode"] == 1, counts
+    assert not any(k.startswith("decode") and k != "decode"
+                   for k in counts), counts
+
+
+def test_sampler_cond_keeps_greedy_exact_in_mixed_grid():
+    """The lax.cond-gated sampler must leave greedy streams bit-exact
+    when a sampled stream shares the batch (the cond takes the sampled
+    branch; per-row temperature <= 0 still selects the argmax)."""
+    rng = np.random.default_rng(8)
+    logits = jnp.asarray(rng.standard_normal((3, 32)) * 4, jnp.float32)
+    from repro.serve import sampling
+    toks = sampling.sample(
+        logits,
+        np.asarray([0.0, 1.0, 0.0], np.float32),
+        np.asarray([0, 4, 0], np.int32),
+        np.asarray([1.0, 0.9, 1.0], np.float32),
+        np.asarray([0, 5, 0], np.int32),
+        np.asarray([0, 2, 0], np.int32))
+    want = np.argmax(np.asarray(logits), axis=-1)
+    assert int(toks[0]) == int(want[0]) and int(toks[2]) == int(want[2])
+
+
 def test_runtime_blocking_mode_matches_chunked_tokens():
     """prefill_mode='blocking' (the pre-runtime baseline) must produce
     identical tokens to chunked mode — the scheduling changes, the math

@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serve.kvpool import (KVPool, PoolError, PoolExhausted,
-                                TRASH_BLOCK, blocks_for, init_pages,
-                                paged_write, paged_view)
+from repro.serve.kvpool import (KVPool, ShardedKVPool, PoolError,
+                                PoolExhausted, TRASH_BLOCK, blocks_for,
+                                init_pages, paged_write, paged_view)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -122,6 +122,133 @@ def test_churn_property(ops):
     """No double-ownership, free-list disjointness, per-seq caps — under
     arbitrary alloc/append/free interleavings."""
     _churn(KVPool(num_blocks=11, block_size=4, max_blocks_per_seq=4), ops)
+
+
+def _trash_ids(pool):
+    if isinstance(pool, ShardedKVPool):
+        return {pool._offset(s) for s in range(pool.n_shards)}
+    return {TRASH_BLOCK}
+
+
+def _live_blocks(pool, clients):
+    out = set()
+    for c in clients:
+        if pool.has(c):
+            out |= {int(b) for b in pool.block_table(c) if b >= 0}
+    return out
+
+
+@pytest.mark.parametrize("make", [
+    lambda: KVPool(num_blocks=17, block_size=4, max_blocks_per_seq=5),
+    lambda: ShardedKVPool(num_blocks=16, block_size=4,
+                          max_blocks_per_seq=3, n_shards=2, n_rows=6),
+])
+def test_trash_never_live_under_churn(make):
+    """After arbitrary alloc/append/free interleavings, no trash block
+    (block 0; every shard's local block 0 in the sharded pool) is ever
+    referenced by a live block table."""
+    rng = np.random.default_rng(4)
+    p = make()
+    ops = [(int(rng.integers(3)), int(rng.integers(6)),
+            int(rng.integers(1, 12))) for _ in range(300)]
+    live = set()
+    for kind, cid, n in ops:
+        try:
+            if kind == 0 and cid not in live:
+                p.allocate(cid, n)
+                live.add(cid)
+            elif kind == 1 and cid in live:
+                p.append(cid, n)
+            elif kind == 2 and cid in live:
+                p.free(cid)
+                live.discard(cid)
+        except PoolExhausted:
+            pass
+        p.check_invariants()
+        assert not (_live_blocks(p, range(6)) & _trash_ids(p))
+
+
+# -- sharded pool ------------------------------------------------------------
+
+def test_sharded_pool_row_to_shard_mapping_and_trash():
+    p = ShardedKVPool(num_blocks=12, block_size=4, max_blocks_per_seq=3,
+                      n_shards=3, n_rows=6)
+    assert p.blocks_per_shard == 4 and p.rows_per_shard == 2
+    assert [p.shard_of(j) for j in range(6)] == [0, 0, 1, 1, 2, 2]
+    assert [p.trash_for(j) for j in range(6)] == [0, 0, 4, 4, 8, 8]
+    np.testing.assert_array_equal(p.trash_vector(range(6)),
+                                  [0, 0, 4, 4, 8, 8])
+    with pytest.raises(PoolError):
+        p.shard_of(6)
+
+
+def test_sharded_pool_blocks_stay_in_segment():
+    p = ShardedKVPool(num_blocks=12, block_size=4, max_blocks_per_seq=3,
+                      n_shards=2, n_rows=4)
+    b0 = p.allocate(0, 8)                 # shard 0: global ids in (0, 6)
+    b2 = p.allocate(2, 8)                 # shard 1: global ids in (6, 12)
+    assert all(0 < b < 6 for b in b0)
+    assert all(6 < b < 12 for b in b2)
+    assert p.append(2, 4)[0] > 6
+    bt = p.table_array([0, 1, 2, 3])
+    assert (bt[1] == -1).all() and (bt[3] == -1).all()
+    assert set(bt[0][bt[0] >= 0]) == set(b0)
+    p.check_invariants()
+
+
+def test_sharded_pool_exhaustion_is_per_shard():
+    """Shard 0 running dry must not consume (or corrupt) shard 1's
+    blocks, and vice versa; double free still raises."""
+    p = ShardedKVPool(num_blocks=8, block_size=4, max_blocks_per_seq=3,
+                      n_shards=2, n_rows=4)      # 3 allocatable per shard
+    p.allocate(0, 12)                            # shard 0 full
+    with pytest.raises(PoolExhausted, match="shard 0"):
+        p.allocate(1, 4)
+    b = p.allocate(2, 12)                        # shard 1 unaffected
+    assert len(b) == 3 and all(4 < x < 8 for x in b)
+    with pytest.raises(PoolExhausted, match="shard 1"):
+        p.allocate(3, 4)
+    p.free(0)
+    with pytest.raises(PoolError):
+        p.free(0)                                # double free
+    p.allocate(1, 4)                             # freed segment reusable
+    p.check_invariants()
+
+
+def test_sharded_pool_validates_divisibility():
+    with pytest.raises(ValueError):
+        ShardedKVPool(num_blocks=9, block_size=4, max_blocks_per_seq=2,
+                      n_shards=2, n_rows=4)
+    with pytest.raises(ValueError):
+        ShardedKVPool(num_blocks=8, block_size=4, max_blocks_per_seq=2,
+                      n_shards=2, n_rows=3)
+
+
+def test_paged_write_per_row_trash_routing():
+    """Invalid positions route to each row's OWN trash block: no write
+    ever lands outside the row's shard segment."""
+    bs, hk, hd = 2, 1, 4
+    p = ShardedKVPool(num_blocks=8, block_size=bs, max_blocks_per_seq=2,
+                      n_shards=2, n_rows=2)
+    p.allocate(0, 2)
+    p.allocate(1, 2)
+    cache = init_pages(8, bs, hk, hd, jnp.float32)
+    cache["bt"] = jnp.asarray(p.table_array([0, 1]))
+    positions = jnp.asarray([[0, 1, -1], [0, 1, -1]])   # one pad per row
+    marker = jnp.concatenate(
+        [jnp.ones((2, 2, hk, hd)), jnp.full((2, 1, hk, hd), 7.0)], axis=1)
+    cache = paged_write(cache, marker, -marker, positions,
+                        trash=jnp.asarray(p.trash_vector([0, 1])))
+    # both trash blocks took a (masked) pad write; neither crossed shards
+    kp = np.asarray(cache["kp"])
+    assert kp[0, 0, 0, 0] == 7.0 and kp[4, 0, 0, 0] == 7.0
+    assert (np.asarray(cache["ppos"])[0] == -1).all()
+    assert (np.asarray(cache["ppos"])[4] == -1).all()
+    # live writes landed in the right segments
+    kc, _, pos = paged_view(cache)
+    np.testing.assert_array_equal(np.asarray(pos[:, :2]),
+                                  [[0, 1], [0, 1]])
+    assert (np.asarray(kc[:, :2]) == 1.0).all()
 
 
 # -- device-side page ops ---------------------------------------------------

@@ -82,6 +82,121 @@ def test_paged_matches_contiguous_decode_attention(window):
                                atol=3e-5, rtol=1e-4)
 
 
+# ------------------------------------------------------- edge shapes
+
+def test_paged_decode_single_block_rows():
+    """Rows whose whole context fits in ONE block (table width 1), plus
+    a row at position 0 (empty context except its own token)."""
+    B, H, HKV, DH, BS, MB, P = 3, 4, 2, 8, 8, 1, 8
+    q = jax.random.normal(KEY, (B, 1, H, DH))
+    kp, vp, bt, ppos = build_pool([8, 3, 1], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    q_pos = jnp.asarray([7, 2, 0], jnp.int32)
+    got = ops.paged_attention(q, kp, vp, bt, ppos, q_pos, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ppos, q_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_single_block_rows():
+    """Chunked-prefill kernel with a width-1 block table: the whole
+    prompt (and the chunk) lives in a single block."""
+    B, H, HKV, DH, BS, MB, P, LQ = 2, 4, 2, 8, 8, 1, 8, 4
+    q = jax.random.normal(KEY, (B, LQ, H, DH))
+    kp, vp, bt, ppos = build_pool([8, 6], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    q_start = jnp.asarray([4, 2], jnp.int32)
+    q_len = jnp.asarray([4, 4], jnp.int32)
+    got = ops.paged_prefill_attention(q, kp, vp, bt, ppos, q_start, q_len,
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, bt, ppos, q_start,
+                                           q_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_chunk_on_block_boundary():
+    """A chunk that starts AND ends exactly on block boundaries (start a
+    multiple of the block size, length == block size) — the boundary
+    arithmetic must not lose the edge slots."""
+    B, H, HKV, DH, BS, MB, P = 2, 4, 2, 8, 4, 6, 16
+    LQ = BS
+    q = jax.random.normal(KEY, (B, LQ, H, DH))
+    kp, vp, bt, ppos = build_pool([16, 12], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    q_start = jnp.asarray([12, 8], jnp.int32)    # both on block edges
+    q_len = jnp.asarray([4, 4], jnp.int32)       # chunk end == block end
+    got = ops.paged_prefill_attention(q, kp, vp, bt, ppos, q_start, q_len,
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, bt, ppos, q_start,
+                                           q_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("lens,q_pos", [
+    ([29, 13, 7], [28, 12, 6]),          # non-power-of-two lengths
+    ([31, 17, 11], [30, 16, 10]),
+])
+def test_paged_decode_non_pow2_lengths(lens, q_pos):
+    B, H, HKV, DH, BS, MB, P = 3, 8, 2, 16, 8, 4, 16
+    q = jax.random.normal(KEY, (B, 1, H, DH))
+    kp, vp, bt, ppos = build_pool(lens, num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH,
+                                  key=jax.random.fold_in(KEY, lens[0]))
+    got = ops.paged_attention(q, kp, vp, bt, ppos,
+                              jnp.asarray(q_pos, jnp.int32),
+                              interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ppos,
+                                   jnp.asarray(q_pos, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_prefill_non_pow2_chunk():
+    """Lq = 7 (not a power of two) with partially padded rows."""
+    B, H, HKV, DH, BS, MB, P, LQ = 2, 4, 2, 8, 8, 4, 12, 7
+    q = jax.random.normal(KEY, (B, LQ, H, DH))
+    kp, vp, bt, ppos = build_pool([23, 11], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    q_start = jnp.asarray([16, 6], jnp.int32)
+    q_len = jnp.asarray([7, 5], jnp.int32)       # row 1: 2 padded queries
+    got = ops.paged_prefill_attention(q, kp, vp, bt, ppos, q_start, q_len,
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, bt, ppos, q_start,
+                                           q_len)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(want)[0],
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got)[1, :5],
+                               np.asarray(want)[1, :5],
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_paged_kernels_single_row_batch():
+    """B = 1 (the N_mux == 1, one-row edge): both kernels against the
+    oracle."""
+    H, HKV, DH, BS, MB, P = 4, 2, 8, 4, 4, 8
+    kp, vp, bt, ppos = build_pool([13], num_blocks=P, block_size=BS,
+                                  max_blocks=MB, hkv=HKV, dh=DH, key=KEY)
+    q = jax.random.normal(KEY, (1, 1, H, DH))
+    got = ops.paged_attention(q, kp, vp, bt, ppos,
+                              jnp.asarray([12], jnp.int32), interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, bt, ppos,
+                                   jnp.asarray([12], jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+    qc = jax.random.normal(jax.random.fold_in(KEY, 9), (1, 4, H, DH))
+    got = ops.paged_prefill_attention(qc, kp, vp, bt, ppos,
+                                      jnp.asarray([9], jnp.int32),
+                                      jnp.asarray([4], jnp.int32),
+                                      interpret=True)
+    want = ref.paged_prefill_attention_ref(qc, kp, vp, bt, ppos,
+                                           jnp.asarray([9], jnp.int32),
+                                           jnp.asarray([4], jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
 def test_unallocated_table_entries_stay_masked():
     """-1 table entries are clamped to page 0 for the gather/DMA; even a
     'poisoned' page 0 (seemingly valid positions) must not leak into the

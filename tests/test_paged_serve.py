@@ -172,6 +172,48 @@ def test_continuous_paged_backpressure_on_undersized_pool():
         run_continuous(params, sc, 2, [(0, mk(17), 4)])   # > per-seq cap
 
 
+def test_admit_exhaustion_triggers_cancel_admit_not_corruption():
+    """Driving the runtime directly: an admission the pool cannot fund is
+    rolled back via cancel_admit — the request returns to the queue, the
+    row's slots and prefill bookkeeping are cleared, the pool's
+    invariants hold (nothing leaked) — and the group is served correctly
+    once the blocking row drains."""
+    from repro.serve import Request
+    from repro.serve.runtime import ServeRuntime
+    cfg, params, _ = make_model(1)
+    sc = ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=1), capacity=16,
+                     dtype=jnp.float32, cache_layout="paged",
+                     block_size=8, num_blocks=3)     # one row at a time
+    rt = ServeRuntime(params, sc, 2, chunk=8)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(4, cfg.vocab_size, size=(12,)).astype(np.int32)
+               for _ in range(2)]
+    rt.submit(Request(uid=0, prompt=[int(t) for t in prompts[0]],
+                      max_new=4))
+    rt.submit(Request(uid=1, prompt=[int(t) for t in prompts[1]],
+                      max_new=4))
+    rt.step()
+    # request 0 admitted (2 blocks), request 1's admission rolled back
+    assert len(rt.sched.queue) == 1
+    assert rt.sched.queue[0].uid == 1
+    assert rt.sched.queue[0].output == []            # untouched by rollback
+    assert 0 in rt.row_len and 1 not in rt.row_len   # only row 0 funded
+    assert 1 not in rt.sched.prefill_progress        # rollback cleared it
+    assert not any(s.request is not None and s.request.uid == 1
+                   for row in rt.sched.slots for s in row)
+    rt.pool.check_invariants()
+    while rt.has_work():
+        rt.step()
+    assert len(rt.stats["completed"]) == 2
+    assert rt.pool.n_used_blocks == 0
+    rt.pool.check_invariants()
+    by_uid = {r.uid: r.output for r in rt.stats["completed"]}
+    for i, p in enumerate(prompts):
+        want = greedy_generate(params, sc, jnp.asarray(p)[None], steps=4)[0]
+        np.testing.assert_array_equal(np.asarray(by_uid[i]),
+                                      np.asarray(want))
+
+
 def test_continuous_paged_preempts_on_append_exhaustion():
     """A row whose mid-decode block append exhausts the pool is
     preempted (blocks freed, requests requeued) and later resumed from
