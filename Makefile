@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-mesh bench-smoke serve-smoke
+.PHONY: test test-mesh bench-smoke serve-smoke docs-check
 
 test:                      ## tier-1: full test suite
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -17,3 +17,6 @@ bench-smoke:               ## ring-vs-paged churn benchmark, tiny CPU budget
 serve-smoke:               ## continuous paged serving end-to-end
 	$(PY) -m repro.launch.serve --continuous --cache paged \
 	    --requests 4 --new-tokens 4 --prompt-len 8 --block-size 4
+
+docs-check:                ## smoke-run / validate README+DESIGN shell blocks
+	$(PY) tools/docs_check.py

@@ -1,10 +1,10 @@
 """Continuous serving under a churning request trace: ring vs paged,
-blocking vs chunked prefill.
+blocking vs chunked prefill, fixed mux widths vs SLO-routed width lanes.
 
 Beyond-paper benchmark for the serve stack (DESIGN.md): a stream of
 requests with heterogeneous prompt lengths and output budgets arrives
-over time; the grid admits and retires streams continuously.  Three
-arms over the identical trace:
+over time; the grid admits and retires streams continuously.  Arms over
+the identical trace:
 
   * ``ring``           — grid-wide re-prefill on every composition
                          change (the layout allows nothing finer);
@@ -13,9 +13,20 @@ arms over the identical trace:
                          joining prompt);
   * ``paged-chunked``  — the ``ServeRuntime``: shape-bucketed prompt
                          chunks interleaved with decode, jitted steps
-                         that compile once per bucket.
+                         that compile once per bucket;
+  * ``fixed-N<w>``     — paged-chunked pinned at mux width w, one arm
+                         per lane width: the paper's Table-1-style
+                         throughput-vs-width curve measured at serve
+                         time rather than in fill-drain batches;
+  * ``lanes``          — width-lane serving (DESIGN.md §width lanes):
+                         one runtime per width in ``--lanes``, requests
+                         routed by SLO class + live lane load.
 
-Reported per arm (CSV: ``serve_churn,<arm>,...``):
+Reported per arm (CSV: ``serve_churn,<arm>,...``; the ``lanes`` arm adds
+one ``serve_churn,lanes/N<w>,...`` row per lane):
+  * mux_n            — the arm's active mux width (the lanes arm
+                       reports aggregate widths plus per-lane rows, so
+                       trajectories stay comparable across lane configs)
   * tok_s            — generated tokens / wall second
   * prefill_backbone — backbone token-positions spent in prefill
                        (per-row tokens × rows touched; the re-prefill
@@ -30,6 +41,9 @@ Reported per arm (CSV: ``serve_churn,<arm>,...``):
   * slot_util        — mean occupied fraction of the N_mux × B grid
   * cache_util       — mean occupancy of the reserved cache memory
 
+``--json PATH`` additionally dumps every row (including the per-lane
+breakdown and routing counters) as JSON for trajectory tooling.
+
 Runnable in reduced mode on CPU:
 
     PYTHONPATH=src python -m benchmarks.serve_churn --smoke
@@ -37,6 +51,7 @@ Runnable in reduced mode on CPU:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -47,6 +62,7 @@ from repro.core import MuxSpec
 from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig
+from repro.serve.router import SLO_CLASSES
 from repro.launch.serve import run_continuous
 
 
@@ -66,6 +82,14 @@ def make_trace(rng, n_requests: int, *, arrival_every: float,
     return out
 
 
+def with_slo(trace, seed: int):
+    """Tag a trace with uniformly mixed SLO classes (lanes arm only;
+    the base trace stays byte-identical across arms)."""
+    rng = np.random.default_rng(seed + 17)
+    return [(t, p, m, None, str(rng.choice(SLO_CLASSES)))
+            for t, p, m in trace]
+
+
 def _pct(xs, q):
     return float(np.percentile(xs, q)) if xs else 0.0
 
@@ -81,58 +105,114 @@ def latency_stats(completed):
             "tpot_p50": _pct(tpot, 50), "tpot_p95": _pct(tpot, 95)}
 
 
-ARMS = (("ring", "ring", None),
-        ("paged-blocking", "paged", "blocking"),
-        ("paged-chunked", "paged", "chunked"))
+CSV_HEADER = ("serve_churn,arm,mux_n,tok_s,prefill_backbone,"
+              "prefill_compute,prefill_events,ttft_p50,ttft_p95,"
+              "tpot_p50,tpot_p95,slot_util,cache_util,requests")
+
+
+def _csv(row):
+    print(f"serve_churn,{row['arm']},{row['mux_n']},{row['tok_s']:.2f},"
+          f"{row['prefill_backbone']},{row['prefill_compute']},"
+          f"{row['prefill_events']},"
+          f"{row['ttft_p50']:.4f},{row['ttft_p95']:.4f},"
+          f"{row['tpot_p50']:.4f},{row['tpot_p95']:.4f},"
+          f"{row['slot_util']:.3f},{row['cache_util']:.3f},"
+          f"{row['requests']}")
+
+
+def _mean(xs):
+    return float(np.mean(xs)) if len(xs) else 0.0
+
+
+def _row(arm, mux_n, stats, completed, wall=None):
+    wall = stats["wall"] if wall is None else wall
+    row = {
+        "arm": arm,
+        "mux_n": mux_n,
+        "tok_s": (sum(len(r.output) for r in completed)
+                  / max(wall, 1e-9)),
+        "prefill_backbone": stats["prefill_tokens"],
+        "prefill_compute": stats["prefill_compute_tokens"],
+        "prefill_events": stats["prefill_events"],
+        "slot_util": _mean(stats["slot_util"]),
+        "cache_util": _mean(stats["cache_util"]),
+        "requests": len(completed),
+    }
+    row.update(latency_stats(completed))
+    return row
 
 
 def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         n_requests=10, arrival_every=2.0, seed=0, block_size=8,
-        chunk=8, prompt=(6, 16), new=(3, 10)):
+        chunk=8, prompt=(6, 16), new=(3, 10), lanes=(1, 2, 4),
+        json_path=None):
     cfg = get_config(arch, reduced=True)
-    mux = MuxSpec(n=mux_n)
-    params = TransformerLM.init(jax.random.PRNGKey(seed), cfg, mux)
+    widths = sorted(set((mux_n,) + tuple(lanes)))
+    # one trained model per mux width (MUX-PLMs are width-specific)
+    params = {w: TransformerLM.init(
+        jax.random.fold_in(jax.random.PRNGKey(seed), w), cfg, MuxSpec(n=w))
+        for w in widths}
     capacity = prompt[1] + new[1] + block_size
     results = []
-    print("serve_churn,arm,tok_s,prefill_backbone,prefill_compute,"
-          "prefill_events,ttft_p50,ttft_p95,tpot_p50,tpot_p95,"
-          "slot_util,cache_util,requests")
-    for arm, layout, mode in ARMS:
-        sc = ServeConfig(cfg=cfg, kind="lm", mux=mux, capacity=capacity,
-                         dtype=jnp.float32, cache_layout=layout,
-                         block_size=block_size)
+    print(CSV_HEADER)
+
+    def sc_for(width, layout):
+        return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=width),
+                           capacity=capacity, dtype=jnp.float32,
+                           cache_layout=layout, block_size=block_size)
+
+    def trace_for():
         rng = np.random.default_rng(seed)        # identical trace per arm
-        trace = make_trace(rng, n_requests, arrival_every=arrival_every,
-                           prompt_lo=prompt[0], prompt_hi=prompt[1],
-                           new_lo=new[0], new_hi=new[1],
-                           vocab=cfg.vocab_size)
-        stats = run_continuous(params, sc, rows, trace, chunk=chunk,
+        return make_trace(rng, n_requests, arrival_every=arrival_every,
+                          prompt_lo=prompt[0], prompt_hi=prompt[1],
+                          new_lo=new[0], new_hi=new[1],
+                          vocab=cfg.vocab_size)
+
+    fixed_arms = [("ring", "ring", None, mux_n),
+                  ("paged-blocking", "paged", "blocking", mux_n),
+                  ("paged-chunked", "paged", "chunked", mux_n)]
+    # the serve-time Table-1-style width curve: chunked paged runtime
+    # pinned at each lane width over the identical trace
+    fixed_arms += [(f"fixed-N{w}", "paged", "chunked", w)
+                   for w in lanes]
+
+    for arm, layout, mode, width in fixed_arms:
+        stats = run_continuous(params[width], sc_for(width, layout), rows,
+                               trace_for(), chunk=chunk,
                                prefill_mode=mode or "chunked")
         assert len(stats["completed"]) == n_requests
         # the arm label must describe what actually ran (the runtime
         # falls back to blocking for recurrent / contextual-mux configs)
         assert layout == "ring" or stats["prefill_mode"] == mode
-        row = {
-            "arm": arm,
-            "tok_s": stats["generated_tokens"] / max(stats["wall"], 1e-9),
-            "prefill_backbone": stats["prefill_tokens"],
-            "prefill_compute": stats["prefill_compute_tokens"],
-            "prefill_events": stats["prefill_events"],
-            "slot_util": float(np.mean(stats["slot_util"]))
-            if stats["slot_util"] else 0.0,
-            "cache_util": float(np.mean(stats["cache_util"]))
-            if stats["cache_util"] else 0.0,
-            "requests": n_requests,
-        }
-        row.update(latency_stats(stats["completed"]))
+        row = _row(arm, width, stats, stats["completed"])
         results.append(row)
-        print(f"serve_churn,{arm},{row['tok_s']:.2f},"
-              f"{row['prefill_backbone']},{row['prefill_compute']},"
-              f"{row['prefill_events']},"
-              f"{row['ttft_p50']:.4f},{row['ttft_p95']:.4f},"
-              f"{row['tpot_p50']:.4f},{row['tpot_p95']:.4f},"
-              f"{row['slot_util']:.3f},{row['cache_util']:.3f},"
-              f"{n_requests}")
+        _csv(row)
+
+    if lanes:
+        stats = run_continuous(params, sc_for(mux_n, "paged"), rows,
+                               with_slo(trace_for(), seed), chunk=chunk,
+                               lanes=tuple(lanes))
+        assert len(stats["completed"]) == n_requests
+        agg = _row("lanes", "+".join(str(w) for w in lanes), stats,
+                   stats["completed"])
+        agg["widths"] = list(lanes)
+        agg["routing"] = stats["routing"]
+        agg["lanes"] = []
+        for ls in stats["lanes"]:
+            lane_row = _row(f"lanes/N{ls['n_mux']}", ls["n_mux"], ls,
+                            ls["completed"], wall=stats["wall"])
+            lane_row["lane"] = ls["lane"]
+            lane_row["rows"] = ls["rows"]
+            agg["lanes"].append(lane_row)
+        results.append(agg)
+        _csv(agg)
+        for lane_row in agg["lanes"]:
+            _csv(lane_row)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"serve_churn wrote {json_path}")
     return results
 
 
@@ -146,11 +226,20 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lanes", default="1,2,4", metavar="N1,N2,...",
+                    help="width-lane arm + one fixed-N arm per width "
+                         "('' disables the lane arms)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="dump all rows (incl. per-lane breakdown and "
+                         "routing counters) as JSON")
     args = ap.parse_args()
+    lanes = (tuple(int(x) for x in args.lanes.split(","))
+             if args.lanes else ())
     n = 6 if args.smoke else args.requests
     t0 = time.time()
     run(arch=args.arch, mux_n=args.mux_n, rows=args.rows, n_requests=n,
-        chunk=args.chunk, seed=args.seed)
+        chunk=args.chunk, seed=args.seed, lanes=lanes,
+        json_path=args.json)
     print(f"serve_churn done in {time.time() - t0:.0f}s")
 
 

@@ -23,6 +23,13 @@ devices stand in for a real slice:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_mux.py --paged \
         --mesh 2,4 --requests 6
+
+Width-lane serving (DESIGN.md §width lanes) hosts one paged runtime per
+mux width and routes each request to a lane by its SLO class (latency /
+balanced / throughput) and live lane load:
+
+    PYTHONPATH=src python examples/serve_mux.py --paged --lanes 1,4,8 \
+        --slo-mix latency=0.25,balanced=0.5,throughput=0.25 --requests 9
 """
 import sys
 

@@ -19,6 +19,18 @@ Two modes (DESIGN.md):
     python -m repro.launch.serve --arch qwen2-1.5b --continuous \
         --cache paged --requests 8 --new-tokens 8 --temperature 0.8
 
+  * width lanes (``--lanes 1,4,8``, DESIGN.md §width lanes): several
+    paged runtimes at different mux widths served side by side; each
+    request's SLO class (``--slo-mix``) picks its lane — the narrow lane
+    for latency, wide lanes for throughput — with spill-over when a lane
+    saturates and an optional shared block budget (``--pool-budget``)
+    rebalanced across lanes:
+
+    python -m repro.launch.serve --arch qwen2-1.5b --continuous \
+        --cache paged --lanes 1,4,8 \
+        --slo-mix latency=0.25,balanced=0.5,throughput=0.25 \
+        --requests 12 --new-tokens 8
+
 Sampling (``serve.sampling``) is per-stream: ``--temperature``,
 ``--top-k`` and ``--top-p`` set every request's policy here, with the
 request uid as its seed; programmatic callers attach a ``SamplingParams``
@@ -39,6 +51,8 @@ from repro.configs import get_config, model_kind
 from repro.models import TransformerLM, VLM, EncDecLM
 from repro.serve import (ServeConfig, init_cache, prefill, decode_step,
                          MuxBatcher, Request, sampling)
+from repro.serve.engine import lane_config
+from repro.serve.router import LaneRouter, LaneSpec, SLO_CLASSES
 from repro.serve.runtime import ServeRuntime
 from repro.serve.scheduler import ContinuousScheduler
 
@@ -59,19 +73,114 @@ def _sample_grid(sched, logits, default_sampling):
         logits, plist, np.asarray(steps, np.int32)))
 
 
+def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
+               arrivals, lanes, *, pad_id, on_prefill, chunk, prefill_mode,
+               default_sampling, mesh, use_kernels, pool_budget,
+               spill_queue):
+    """Width-lane serve loop (DESIGN.md §width lanes): one ``ServeRuntime``
+    per lane at that lane's mux width, ``LaneRouter`` admitting each
+    arrival by SLO class + live lane load, all lanes stepping in lockstep
+    (narrowest lane first — latency lanes admit before throughput lanes
+    contend for rebalanced pool quota).
+
+    Every lane keeps the single-width runtime's guarantees lane-locally:
+    token streams identical to a fixed-width run at the lane's N fed the
+    same sub-schedule, compile counts 1 decode + one per bucket per
+    width (asserted via ``check_compile_once`` before returning), and
+    backpressure (rollback / preemption) confined to the lane's own pool
+    partition.
+    """
+    specs = [s if isinstance(s, LaneSpec)
+             else LaneSpec(n_mux=int(s), rows=backbone_rows, chunk=chunk)
+             for s in lanes]
+    runtimes = []
+    for idx, spec in enumerate(specs):
+        if spec.n_mux not in params_by_width:
+            raise ValueError(
+                f"lanes mode needs params per width: missing width "
+                f"{spec.n_mux} in {sorted(params_by_width)}")
+        sc_l = lane_config(sc, spec.n_mux)
+        runtimes.append(ServeRuntime(
+            params_by_width[spec.n_mux], sc_l, spec.rows,
+            chunk=None if prefill_mode == "blocking" else spec.chunk,
+            pad_id=pad_id, default_sampling=default_sampling,
+            on_prefill=on_prefill, mesh=mesh, use_kernels=use_kernels,
+            lane=idx))
+    # step order: narrow lanes first, so the latency lane's admissions
+    # land before wider lanes draw on freshly rebalanced quota
+    step_order = sorted(range(len(runtimes)),
+                        key=lambda i: runtimes[i].n_mux)
+    router = LaneRouter(runtimes, budget=pool_budget,
+                        spill_queue=spill_queue)
+    arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
+    uid, step = 0, 0
+    t0 = time.time()
+    while arrivals or any(rt.has_work() for rt in runtimes):
+        while arrivals and arrivals[0][0] <= step:
+            a = arrivals.popleft()
+            r = Request(uid=uid, prompt=list(a[1]), max_new=a[2],
+                        sampling=a[3] if len(a) > 3 else None,
+                        slo=a[4] if len(a) > 4 else None)
+            uid += 1
+            i = router.route(r)
+            r.routed_step = step
+            runtimes[i].submit(r)
+        router.rebalance()
+        for i in step_order:
+            runtimes[i].step()
+        step += 1
+    for rt in runtimes:
+        rt.check_compile_once()
+    completed = [r for rt in runtimes for r in rt.stats["completed"]]
+    stats = {
+        "lanes": [rt.stats for rt in runtimes],
+        "widths": [s.n_mux for s in specs],
+        "pools": [rt.pool for rt in runtimes],
+        "routing": router.counters,
+        "completed": completed,
+        "wall": time.time() - t0,
+        "generated_tokens": sum(len(r.output) for r in completed),
+        "prefill_mode": runtimes[0].stats["prefill_mode"],
+        # aggregates over lanes (sums for counters, concatenation for
+        # per-step traces) so single-width consumers keep working
+        "prefill_tokens": sum(rt.stats["prefill_tokens"]
+                              for rt in runtimes),
+        "prefill_compute_tokens": sum(rt.stats["prefill_compute_tokens"]
+                                      for rt in runtimes),
+        "prefill_events": sum(rt.stats["prefill_events"]
+                              for rt in runtimes),
+        "decode_steps": sum(rt.stats["decode_steps"] for rt in runtimes),
+        "slot_util": [u for rt in runtimes for u in rt.stats["slot_util"]],
+        "cache_util": [u for rt in runtimes
+                       for u in rt.stats["cache_util"]],
+    }
+    return stats
+
+
 def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                    *, pad_id: int = 0, on_prefill=None, chunk: int = 32,
                    prefill_mode: str = "chunked", default_sampling=None,
-                   mesh=None, use_kernels: bool = False):
+                   mesh=None, use_kernels: bool = False, lanes=None,
+                   pool_budget=None, spill_queue=None):
     """Continuous-batching serve loop for both cache layouts.
 
-    arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams]),
-    sorted by step.  Each loop iteration admits what it can, then runs
-    one decode step over the grid.  Returns a stats dict.
+    arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams
+    [, slo_class]]), sorted by step.  Each loop iteration admits what it
+    can, then runs one decode step over the grid.  Returns a stats dict.
 
     mesh: optional ('data', 'model') mesh (``launch.mesh.make_serve_mesh``)
     for the paged runtime — rows/pool shards over 'data', tensor
     parallelism over 'model'; requires ``sc.n_shards`` == data-axis size.
+
+    lanes: optional width-lane serving (DESIGN.md §width lanes): a
+    sequence of mux widths (ints) or ``serve.router.LaneSpec``s.  One
+    ``ServeRuntime`` is hosted per lane at that lane's width and
+    ``serve.router.LaneRouter`` admits each arrival to a lane from its
+    SLO class (the 5th arrival element) and live lane load.  ``params``
+    must then be a mapping {width: params} (one trained model per mux
+    width) and ``sc`` is the width-agnostic base config
+    (``engine.lane_config`` derives each lane's).  pool_budget /
+    spill_queue are forwarded to the router.
 
     Prefill accounting (consistent across arms — DESIGN.md):
       * ``prefill_tokens``          — backbone token-positions processed
@@ -94,6 +203,16 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
             "continuous serving supports decoder-only LM families")
     if mesh is not None and sc.cache_layout != "paged":
         raise ValueError("mesh serving requires the paged cache layout")
+    if lanes is not None:
+        if sc.cache_layout != "paged":
+            raise ValueError(
+                "width-lane serving requires the paged cache layout")
+        return _run_lanes(params, sc, backbone_rows, arrivals, lanes,
+                          pad_id=pad_id, on_prefill=on_prefill, chunk=chunk,
+                          prefill_mode=prefill_mode,
+                          default_sampling=default_sampling, mesh=mesh,
+                          use_kernels=use_kernels, pool_budget=pool_budget,
+                          spill_queue=spill_queue)
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid = 0
     t0 = time.time()
@@ -260,6 +379,26 @@ def _fill_drain(params, sc, cfg, kind, args, default_sampling):
           f"{served * args.new_tokens / dt:.1f} tok/s)")
 
 
+def _parse_slo_mix(ap, spec: str):
+    """Parse 'latency=0.25,balanced=0.5,throughput=0.25' into normalized
+    class weights."""
+    mix = {}
+    for part in spec.split(","):
+        k, eq, v = part.partition("=")
+        k = k.strip()
+        if k not in SLO_CLASSES or not eq:
+            ap.error(f"--slo-mix: expected CLASS=WEIGHT with CLASS in "
+                     f"{SLO_CLASSES}, got {part!r}")
+        try:
+            mix[k] = float(v)
+        except ValueError:
+            ap.error(f"--slo-mix: bad weight in {part!r}")
+    total = sum(mix.values())
+    if total <= 0:
+        ap.error("--slo-mix weights must sum to > 0")
+    return {k: v / total for k, v in mix.items()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
@@ -290,6 +429,22 @@ def main(argv=None):
                          "shards over 'data', tensor parallelism over "
                          "'model' (CPU: set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--lanes", default=None, metavar="N1,N2,...",
+                    help="width-lane serving (e.g. --lanes 1,4,8): one "
+                         "paged runtime per mux width, requests routed "
+                         "to lanes by SLO class + live load "
+                         "(DESIGN.md §width lanes); requires "
+                         "--continuous --cache paged")
+    ap.add_argument("--lane-rows", default=None, metavar="R1,R2,...",
+                    help="backbone rows per lane (default: "
+                         "--backbone-batch for every lane)")
+    ap.add_argument("--slo-mix", default="balanced=1",
+                    help="SLO-class mix of the synthetic trace, e.g. "
+                         "latency=0.25,balanced=0.5,throughput=0.25")
+    ap.add_argument("--pool-budget", type=int, default=None,
+                    help="lanes: global KV block budget partitioned into "
+                         "per-lane quotas; the router rebalances unused "
+                         "quota toward queued lanes")
     ap.add_argument("--use-kernels", action="store_true",
                     help="paged continuous serving: route decode/chunk "
                          "attention through the Pallas paged kernels "
@@ -311,7 +466,28 @@ def main(argv=None):
     mux = MuxSpec(n=args.mux_n)
     key = jax.random.PRNGKey(args.seed)
     cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
-    params = cls.init(key, cfg, mux)
+    lanes = slo_mix = None
+    if args.lanes is not None:
+        if not (args.continuous and args.cache == "paged"):
+            ap.error("--lanes requires --continuous --cache paged")
+        try:
+            widths = [int(x) for x in args.lanes.split(",")]
+        except ValueError:
+            ap.error("--lanes expects comma-separated widths, e.g. 1,4,8")
+        lane_rows = ([int(x) for x in args.lane_rows.split(",")]
+                     if args.lane_rows
+                     else [args.backbone_batch] * len(widths))
+        if len(lane_rows) != len(widths):
+            ap.error(f"--lane-rows gives {len(lane_rows)} entries for "
+                     f"{len(widths)} lanes")
+        lanes = [LaneSpec(n_mux=w, rows=r, chunk=args.chunk)
+                 for w, r in zip(widths, lane_rows)]
+        slo_mix = _parse_slo_mix(ap, args.slo_mix)
+        # one trained model per mux width (MUX-PLMs are width-specific)
+        params = {w: cls.init(jax.random.fold_in(key, w), cfg,
+                              MuxSpec(n=w)) for w in set(widths)}
+    else:
+        params = cls.init(key, cfg, mux)
     mesh = None
     n_shards = 1
     if args.mesh is not None:
@@ -345,15 +521,20 @@ def main(argv=None):
         sp = default_sampling and sampling.SamplingParams(
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=i)
-        arrivals.append(
-            (i * args.arrival_every,
-             rng.integers(4, cfg.vocab_size,
-                          size=(args.prompt_len,)).astype(np.int32),
-             args.new_tokens, sp))
+        arr = (i * args.arrival_every,
+               rng.integers(4, cfg.vocab_size,
+                            size=(args.prompt_len,)).astype(np.int32),
+               args.new_tokens, sp)
+        if lanes is not None:
+            classes = sorted(slo_mix)
+            arr += (str(rng.choice(classes,
+                                   p=[slo_mix[c] for c in classes])),)
+        arrivals.append(arr)
     stats = run_continuous(params, sc, args.backbone_batch, arrivals,
                            chunk=args.chunk, prefill_mode=args.prefill,
                            default_sampling=default_sampling, mesh=mesh,
-                           use_kernels=args.use_kernels)
+                           use_kernels=args.use_kernels, lanes=lanes,
+                           pool_budget=args.pool_budget)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
     # report the mode that actually ran (the runtime falls back to
@@ -362,13 +543,33 @@ def main(argv=None):
             else "ring")
     if mesh is not None:
         mode += f"/mesh{tuple(mesh.devices.shape)}"
+    if lanes is not None:
+        mode += f"/lanes[{args.lanes}]"
+    width = (f"widths {args.lanes}" if lanes is not None
+             else f"mux N={mux.n}")
     print(f"continuous[{mode}] served {done} requests "
           f"({stats['generated_tokens']} tokens) in {stats['wall']:.1f}s  "
-          f"(mux N={mux.n}, rows {args.backbone_batch}; "
+          f"({width}, rows {args.backbone_batch}; "
           f"{stats['generated_tokens'] / stats['wall']:.1f} tok/s, "
           f"prefill {stats['prefill_tokens']} backbone tokens "
           f"({stats['prefill_compute_tokens']} padded) in "
           f"{stats['prefill_events']} events, slot util {util:.2f})")
+    if lanes is not None:
+        for ls in stats["lanes"]:
+            toks = sum(len(r.output) for r in ls["completed"])
+            lu = (float(np.mean(ls["slot_util"]))
+                  if ls["slot_util"] else 0.0)
+            compiled = ", ".join(
+                f"{k}×{v}" for k, v in sorted(ls["trace_counts"].items()))
+            print(f"  lane{ls['lane']} N={ls['n_mux']} "
+                  f"rows={ls['rows']}: {len(ls['completed'])} requests, "
+                  f"{toks} tokens, slot util {lu:.2f}; "
+                  f"compiled [{compiled}]")
+        rc = stats["routing"]
+        routed = ", ".join(f"{k}={v}" for k, v in rc["routed"].items())
+        print(f"routing: {routed}; demotions={rc['demotions']}, "
+              f"promotions={rc['promotions']}, "
+              f"rebalanced={rc['rebalanced_blocks']} blocks")
     if "trace_counts" in stats:
         compiled = ", ".join(f"{k}×{v}"
                              for k, v in sorted(stats["trace_counts"].items()))

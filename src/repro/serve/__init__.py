@@ -33,15 +33,24 @@ width over 'model', compile counts unchanged:
     mesh = make_serve_mesh(data=2, model=4)
     sc = ServeConfig(..., cache_layout="paged", n_shards=2)
     rt = ServeRuntime(params, sc, backbone_rows, mesh=mesh)
+
+Width-lane serving (DESIGN.md §width lanes): several runtimes at
+different mux widths served side by side, each request routed to a lane
+by its SLO class (latency / balanced / throughput) and live lane load —
+``serve.router.LaneRouter`` + ``launch.serve run_continuous(lanes=...)``
+(CLI: ``--lanes 1,4,8 --slo-mix ...``).
 """
 from repro.serve.engine import (
     ServeConfig, init_cache, prefill, prefill_chunk, decode_step,
     greedy_generate, backbone_batch, make_pool, set_block_tables,
-    reset_blocks,
+    reset_blocks, lane_config,
 )
 from repro.serve.batcher import MuxBatcher, Request
 from repro.serve.kvpool import (KVPool, ShardedKVPool, PoolError,
                                 PoolExhausted)
 from repro.serve import sampling
 from repro.serve.sampling import SamplingParams
+from repro.serve.router import (LaneRouter, LaneSpec, LaneLoad,
+                                SLO_CLASSES, SLO_LATENCY, SLO_BALANCED,
+                                SLO_THROUGHPUT)
 from repro.serve.runtime import ServeRuntime

@@ -26,6 +26,13 @@ class Request:
     t_submit: float = None          # wall-clock request lifecycle stamps
     t_first: float = None           # (scheduler-set; TTFT/TPOT metrics)
     t_done: float = None
+    # width-lane serving (serve.router; DESIGN.md §width lanes): the
+    # declared SLO class drives lane choice, and the router stamps the
+    # chosen lane + the engine step at which the request entered that
+    # lane's queue (the replay point for lane-parity testing)
+    slo: str = None                 # latency | balanced | throughput | None
+    lane: int = None                # router-assigned serving lane
+    routed_step: int = None         # engine step of lane admission
 
 
 @dataclass

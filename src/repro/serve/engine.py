@@ -74,6 +74,20 @@ class ServeConfig:
         return b * self.max_blocks_per_seq + self.n_shards
 
 
+def lane_config(sc: ServeConfig, n_mux: int) -> ServeConfig:
+    """Derive one serving lane's ``ServeConfig`` from a base config
+    (width-lane serving, DESIGN.md §width lanes): same model, capacity,
+    dtype, block size and shard count — only the mux width changes.
+    ``num_blocks`` is reset to None so each lane sizes its own pool
+    partition from its own row count (the router's global ``budget``
+    then caps live usage via per-lane quotas)."""
+    import dataclasses
+    if n_mux < 1:
+        raise ValueError(f"lane mux width must be >= 1, got {n_mux}")
+    return dataclasses.replace(
+        sc, mux=dataclasses.replace(sc.mux, n=n_mux), num_blocks=None)
+
+
 def make_pool(sc: ServeConfig, global_batch: int):
     """Host-side allocator matching ``init_cache(sc, global_batch)``.
     With ``sc.n_shards > 1`` the pool is a ``ShardedKVPool`` whose block

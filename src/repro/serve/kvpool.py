@@ -66,10 +66,21 @@ class KVPool:
 
     num_blocks includes the reserved trash block 0; allocatable capacity
     is ``num_blocks - 1`` blocks.
+
+    quota: optional soft cap on *live* blocks, below the hard device
+    capacity.  The device pages stay sized at ``num_blocks`` (shapes
+    never change, so jitted programs never re-trace); the quota only
+    gates the host-side allocator.  Width-lane serving partitions one
+    global block budget across per-lane pools this way — each lane keeps
+    its own free list, and ``serve.router.LaneRouter`` moves *unused*
+    quota between lanes as load shifts (DESIGN.md §width lanes).
+    Shrinking a quota below the current usage is legal: nothing is
+    reclaimed, but new allocations are refused until rows drain.
     """
     num_blocks: int
     block_size: int
     max_blocks_per_seq: int
+    quota: int | None = None
     _free: list = field(init=False, repr=False)
     _tables: dict = field(default_factory=dict, init=False, repr=False)
     _lens: dict = field(default_factory=dict, init=False, repr=False)
@@ -79,6 +90,8 @@ class KVPool:
             raise ValueError("need >= 2 blocks (block 0 is reserved)")
         if self.block_size < 1 or self.max_blocks_per_seq < 1:
             raise ValueError("block_size / max_blocks_per_seq must be >= 1")
+        if self.quota is not None and self.quota < 0:
+            raise ValueError(f"quota must be >= 0, got {self.quota}")
         # LIFO free list over ids 1..num_blocks-1 (0 = trash)
         self._free = list(range(self.num_blocks - 1, 0, -1))
 
@@ -90,6 +103,20 @@ class KVPool:
     @property
     def n_used_blocks(self) -> int:
         return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def headroom(self) -> int:
+        """Blocks still allocatable: free list, capped by the quota."""
+        if self.quota is None:
+            return len(self._free)
+        return max(0, min(len(self._free), self.quota - self.n_used_blocks))
+
+    def set_quota(self, quota: int | None):
+        """Install a new soft cap (None = uncapped).  Takes effect on the
+        next allocation; live blocks above a shrunken quota stay live."""
+        if quota is not None and quota < 0:
+            raise ValueError(f"quota must be >= 0, got {quota}")
+        self.quota = quota
 
     def has(self, cid) -> bool:
         return cid in self._tables
@@ -109,6 +136,10 @@ class KVPool:
         if n > len(self._free):
             raise PoolExhausted(
                 f"need {n} blocks, {len(self._free)} free")
+        if self.quota is not None and self.n_used_blocks + n > self.quota:
+            raise PoolExhausted(
+                f"need {n} blocks, quota {self.quota} with "
+                f"{self.n_used_blocks} in use")
         return [self._free.pop() for _ in range(n)]
 
     def allocate(self, cid, num_tokens: int = 0):
@@ -261,6 +292,42 @@ class ShardedKVPool:
     @property
     def n_used_blocks(self) -> int:
         return sum(p.n_used_blocks for p in self._shards)
+
+    @property
+    def headroom(self) -> int:
+        """Allocatable blocks summed over shards (quota-capped per shard)."""
+        return sum(p.headroom for p in self._shards)
+
+    @property
+    def quota(self) -> int | None:
+        """Aggregate soft cap (sum of per-shard quotas; None = uncapped)."""
+        qs = [p.quota for p in self._shards]
+        return None if any(q is None for q in qs) else sum(qs)
+
+    def set_quota(self, quota: int | None):
+        """Split an aggregate soft cap across shards, flooring each
+        shard's share at its CURRENT usage: shrinking a lane's quota
+        (e.g. a rebalance donation) must never drop a hot shard below
+        its live blocks — only genuinely unused headroom moves.  The
+        spare above the floors splits evenly (remainder to the low
+        shards).  When the quota cannot even cover total usage (never
+        the rebalance path, which donates free quota only) the deficit
+        falls back to an even split.  Per-shard quotas keep lane
+        rebalancing honest under a mesh: a lane cannot borrow headroom
+        a single shard does not actually have."""
+        if quota is None:
+            for p in self._shards:
+                p.set_quota(None)
+            return
+        used = [p.n_used_blocks for p in self._shards]
+        if quota >= sum(used):
+            base, rem = divmod(quota - sum(used), self.n_shards)
+            for s, p in enumerate(self._shards):
+                p.set_quota(used[s] + base + (1 if s < rem else 0))
+        else:
+            base, rem = divmod(quota, self.n_shards)
+            for s, p in enumerate(self._shards):
+                p.set_quota(base + (1 if s < rem else 0))
 
     def shard_used_blocks(self, cid) -> int:
         """Used blocks on ``cid``'s OWN shard (backpressure decisions are

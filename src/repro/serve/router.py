@@ -1,0 +1,274 @@
+"""SLO-aware routing across mux-width serving lanes.
+
+The paper's central dial is the mux width N: throughput multiplies by
+~N while quality drops a few points (MUX-PLMs Table 1).  A single-width
+server forces every request to pay the same quality tax.  *Width-lane
+serving* (DESIGN.md §width lanes) instead hosts several independent
+``serve.runtime.ServeRuntime`` lanes at different widths — e.g. an N=1
+latency lane next to N=4 and N=8 throughput lanes — and routes each
+request to a lane from its declared SLO class plus live lane load:
+
+  * ``latency``     — narrowest (highest-quality, fastest-TTFT) lane
+                      first, spilling *wider* (a **demotion**: the
+                      request accepts the quality tax rather than queue)
+                      only when the preferred lane saturates;
+  * ``throughput``  — widest lane first, spilling *narrower* (a
+                      **promotion**: the request gets better quality
+                      than it asked for because the wide lane is busy);
+  * ``balanced``    — middle width first, then outward, wider before
+                      narrower.
+
+A lane is *saturated* when its admission queue backs up past one full
+grid of requests (``spill_queue``, default N_mux × rows) or its pool
+partition has no allocatable block left.  When every eligible lane is
+saturated the router picks the least-pressured one — requests are never
+dropped, and a saturated lane's backpressure verdict stays lane-local:
+each lane owns its scheduler, runtime, pool partition and jitted step
+set, so a ``PoolExhausted`` rollback or a preemption in one lane cannot
+touch another lane's rows.
+
+Pool partitioning: each lane's ``serve.kvpool.KVPool`` (or
+``ShardedKVPool`` under a mesh) keeps its own free list over its own
+device pages; an optional global block ``budget`` is split into
+per-lane *quotas* (soft caps below the device ceiling).  ``rebalance``
+moves **unused** quota from idle lanes to lanes with queued work —
+device shapes never change, so the compile-once guarantee (1 decode
+program + one per prefill bucket *per width*) survives rebalancing.
+
+Routing happens once, at submit time; a routed request is never
+migrated (mux combine is nonlinear through the backbone — a stream
+cannot leave its group mid-flight, DESIGN.md §admission).  This is what
+keeps lane parity testable: each lane's token streams are identical to
+a fixed-width ``ServeRuntime`` fed the same sub-schedule
+(``tests/test_serve_fuzz.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serve.kvpool import blocks_for
+
+SLO_LATENCY = "latency"
+SLO_BALANCED = "balanced"
+SLO_THROUGHPUT = "throughput"
+SLO_CLASSES = (SLO_LATENCY, SLO_BALANCED, SLO_THROUGHPUT)
+
+
+@dataclass(frozen=True)
+class LaneSpec:
+    """Static description of one serving lane.
+
+    n_mux: the lane's mux width N (its own params / jitted step set).
+    rows:  backbone rows of the lane's N_mux × rows grid.
+    chunk: prefill chunk size (None = blocking prefill) for this lane —
+           latency lanes may want smaller chunks than throughput lanes.
+    """
+    n_mux: int
+    rows: int
+    chunk: int | None = 32
+
+    @property
+    def slots(self) -> int:
+        return self.n_mux * self.rows
+
+
+@dataclass(frozen=True)
+class LaneLoad:
+    """One lane's live-load snapshot (``ServeRuntime.load()``): the three
+    signals the router weighs — slot utilization, admission-queue depth
+    and pool headroom — plus the mid-prefill row count for diagnostics."""
+    lane: int
+    n_mux: int
+    slots: int                    # n_mux * rows
+    active: int                   # live streams holding slots
+    queue_depth: int              # requests waiting for admission
+    headroom_blocks: int          # allocatable blocks (quota-capped)
+    mid_prefill: int = 0          # rows mid-way through chunked prefill
+
+    @property
+    def utilization(self) -> float:
+        return self.active / self.slots
+
+    @property
+    def pressure(self) -> float:
+        """In-flight + waiting requests per stream slot; the router's
+        tie-breaker when every eligible lane is saturated."""
+        return (self.active + self.queue_depth) / self.slots
+
+
+class LaneRouter:
+    """Admit requests to width lanes by SLO class and live lane load.
+
+    runtimes: one ``ServeRuntime`` per lane (any object exposing
+    ``lane``, ``n_mux``, ``nrows``, ``sc``, ``pool`` and ``load()``
+    works — unit tests pass fakes).  spill_queue: per-lane queued-request
+    threshold beyond which the lane counts as saturated (default: the
+    lane's slot count — one full grid waiting).  budget: optional global
+    block budget partitioned into per-lane quotas (proportional to each
+    lane's device ceiling); enables ``rebalance``.
+    """
+
+    def __init__(self, runtimes, *, spill_queue: int | None = None,
+                 budget: int | None = None):
+        if not runtimes:
+            raise ValueError("need at least one lane")
+        widths = [rt.n_mux for rt in runtimes]
+        if len(set(widths)) != len(widths):
+            raise ValueError(f"duplicate lane widths {widths}")
+        self.runtimes = list(runtimes)
+        self.spill_queue = spill_queue
+        self.budget = budget
+        # lane indices sorted narrow -> wide; SLO preference orders are
+        # slices/reversals of this
+        self._by_width = sorted(range(len(runtimes)),
+                                key=lambda i: runtimes[i].n_mux)
+        self.counters = {"routed": dict.fromkeys(SLO_CLASSES, 0),
+                         "demotions": 0, "promotions": 0,
+                         "rebalanced_blocks": 0}
+        if budget is not None:
+            self._init_quotas(budget)
+
+    # -- pool partitioning -------------------------------------------------
+    @staticmethod
+    def _ceiling(rt) -> int:
+        """Device-side allocatable blocks of a lane's pool (total minus
+        one reserved trash block per shard)."""
+        pool = rt.pool
+        return pool.num_blocks - getattr(pool, "n_shards", 1)
+
+    def _init_quotas(self, budget: int):
+        """Partition the global budget into per-lane quotas proportional
+        to each lane's device ceiling (every lane keeps at least one
+        row's worth of blocks so no lane starves at t=0)."""
+        ceil = [self._ceiling(rt) for rt in self.runtimes]
+        if budget > sum(ceil):
+            raise ValueError(
+                f"budget {budget} exceeds total device capacity {sum(ceil)}")
+        floors = [min(c, rt.sc.max_blocks_per_seq)
+                  for c, rt in zip(ceil, self.runtimes)]
+        if budget < sum(floors):
+            raise ValueError(
+                f"budget {budget} cannot fund one row per lane "
+                f"(needs >= {sum(floors)})")
+        quotas = list(floors)
+        spare = budget - sum(floors)
+        total_ceil = sum(ceil)
+        for i, rt in enumerate(self.runtimes):
+            extra = min(ceil[i] - quotas[i], spare * ceil[i] // total_ceil)
+            quotas[i] += extra
+        # distribute rounding remainder narrow-first within ceilings
+        rem = budget - sum(quotas)
+        for i in self._by_width:
+            give = min(rem, ceil[i] - quotas[i])
+            quotas[i] += give
+            rem -= give
+        for rt, q in zip(self.runtimes, quotas):
+            rt.pool.set_quota(q)
+
+    def rebalance(self) -> int:
+        """Move unused quota from idle lanes to lanes with queued work.
+
+        A lane *donates* spare quota (free quota beyond one row's worth
+        of reserve) only while its own queue is empty; a lane *takes*
+        enough to fund its queued groups, capped by its device ceiling.
+        Only UNUSED quota ever moves — live blocks stay where they are —
+        and the global sum is conserved.  Under a mesh the lane's
+        ``ShardedKVPool.set_quota`` re-splits with a floor at each
+        shard's live usage, so a donation never strands a hot shard
+        below its live blocks.  Returns blocks moved.  No-op without a
+        budget."""
+        if self.budget is None or len(self.runtimes) < 2:
+            return 0
+        loads = [rt.load() for rt in self.runtimes]
+        surplus, demand = {}, {}
+        for i, (rt, ld) in enumerate(zip(self.runtimes, loads)):
+            quota = rt.pool.quota
+            free_quota = max(0, quota - rt.pool.n_used_blocks)
+            reserve = rt.sc.max_blocks_per_seq
+            if ld.queue_depth == 0 and free_quota > reserve:
+                surplus[i] = free_quota - reserve
+            elif ld.queue_depth > 0:
+                groups = -(-ld.queue_depth // rt.n_mux)
+                want = groups * rt.sc.max_blocks_per_seq - free_quota
+                want = min(want, self._ceiling(rt) - quota)
+                if want > 0:
+                    demand[i] = want
+        moved = 0
+        for i in sorted(demand, key=demand.get, reverse=True):
+            for j in sorted(surplus, key=surplus.get, reverse=True):
+                d = min(demand[i], surplus[j])
+                if d <= 0:
+                    continue
+                self.runtimes[j].pool.set_quota(
+                    self.runtimes[j].pool.quota - d)
+                self.runtimes[i].pool.set_quota(
+                    self.runtimes[i].pool.quota + d)
+                surplus[j] -= d
+                demand[i] -= d
+                moved += d
+                if demand[i] == 0:
+                    break
+        self.counters["rebalanced_blocks"] += moved
+        return moved
+
+    # -- routing policy ----------------------------------------------------
+    def _pref_order(self, slo: str) -> list:
+        bw = self._by_width
+        if slo == SLO_LATENCY:
+            return list(bw)
+        if slo == SLO_THROUGHPUT:
+            return list(reversed(bw))
+        # balanced: middle width first, then outward, wider before
+        # narrower (ride the middle lane, spill toward throughput)
+        mid = (len(bw) - 1) // 2
+        return sorted(bw, key=lambda i: (abs(bw.index(i) - mid),
+                                         -self.runtimes[i].n_mux))
+
+    def _fits(self, i: int, need_tokens: int) -> bool:
+        """Whether a request of ``need_tokens`` (prompt + budget) can
+        EVER be served by lane i — capacity and per-sequence block cap.
+        A request that fits no lane is a sizing error, not backpressure."""
+        sc = self.runtimes[i].sc
+        return (need_tokens <= sc.capacity and
+                blocks_for(need_tokens, sc.block_size)
+                <= sc.max_blocks_per_seq)
+
+    def _saturated(self, i: int, ld: LaneLoad) -> bool:
+        limit = (self.spill_queue if self.spill_queue is not None
+                 else ld.slots)
+        return ld.queue_depth >= limit or ld.headroom_blocks <= 0
+
+    def route(self, request) -> int:
+        """Pick a lane for ``request`` and record the verdict.
+
+        Reads ``request.slo`` (``latency`` / ``balanced`` /
+        ``throughput``; missing/None means balanced) and writes
+        ``request.lane``.  Returns the lane index — the caller submits
+        to that lane's runtime.  Routing is final (see module docstring).
+        """
+        slo = getattr(request, "slo", None) or SLO_BALANCED
+        if slo not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {slo!r} "
+                             f"(expected one of {SLO_CLASSES})")
+        need = len(request.prompt) + request.max_new
+        order = [i for i in self._pref_order(slo) if self._fits(i, need)]
+        if not order:
+            raise ValueError(
+                f"request uid={getattr(request, 'uid', '?')} "
+                f"({need} tokens) fits no lane")
+        loads = {i: self.runtimes[i].load() for i in order}
+        chosen = next((i for i in order if not self._saturated(i, loads[i])),
+                      None)
+        if chosen is None:        # every eligible lane saturated: least
+            chosen = min(order, key=lambda i: loads[i].pressure)
+        self.counters["routed"][slo] += 1
+        if chosen != order[0]:
+            w0 = self.runtimes[order[0]].n_mux
+            wc = self.runtimes[chosen].n_mux
+            self.counters["demotions" if wc > w0 else "promotions"] += 1
+        request.slo = slo
+        request.lane = self.runtimes[chosen].lane
+        return chosen
+
+    def loads(self) -> list:
+        return [rt.load() for rt in self.runtimes]

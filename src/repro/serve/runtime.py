@@ -95,13 +95,16 @@ class ServeRuntime:
     default_sampling: ``SamplingParams`` for requests that don't carry
     their own (None = greedy).  mesh: optional ('data', 'model') device
     mesh for sharded serving — requires ``sc.n_shards`` == the 'data'
-    axis size and ``backbone_rows`` divisible by it.
+    axis size and ``backbone_rows`` divisible by it.  lane: serving-lane
+    id under width-lane serving (DESIGN.md §width lanes) — tags the
+    scheduler's plans and this runtime's stats/load snapshots; each lane
+    owns its own runtime, pool partition and jitted step set.
     """
 
     def __init__(self, params, sc: ServeConfig, backbone_rows: int, *,
                  chunk: int | None = 32, pad_id: int = 0,
                  default_sampling=None, on_prefill=None,
-                 use_kernels: bool = False, mesh=None):
+                 use_kernels: bool = False, mesh=None, lane: int = 0):
         if sc.cache_layout != "paged":
             raise ValueError("ServeRuntime requires cache_layout='paged'")
         if sc.kind != "lm":
@@ -141,11 +144,13 @@ class ServeRuntime:
         self.on_prefill = on_prefill
         self.use_kernels = use_kernels
         self.mesh = mesh
+        self.lane = lane
 
         self.sched = ContinuousScheduler(n_mux=self.n_mux,
                                          backbone_batch=backbone_rows,
                                          max_len=sc.capacity,
-                                         n_shards=sc.n_shards)
+                                         n_shards=sc.n_shards,
+                                         lane=lane)
         self.pool = make_pool(sc, self.nb)
         self.cache = init_cache(sc, self.nb)
         # per-row trash-block routing (each shard's invalid writes stay
@@ -178,6 +183,8 @@ class ServeRuntime:
                       "prefill_log": [], "slot_util": [], "cache_util": [],
                       "completed": self.sched.completed, "pool": self.pool,
                       "trace_counts": self.trace_counts,
+                      "n_mux": self.n_mux, "rows": backbone_rows,
+                      "lane": lane,
                       "prefill_mode": ("chunked" if chunk is not None
                                        else "blocking")}
         # donation: the cache pytree (arg 1) is consumed and returned by
@@ -276,9 +283,65 @@ class ServeRuntime:
     def has_work(self) -> bool:
         return bool(self.sched.queue) or self.sched.n_active > 0
 
+    def load(self):
+        """Live-load snapshot for SLO-aware lane routing
+        (``serve.router.LaneRouter``; DESIGN.md §width lanes): slot
+        utilization, admission-queue depth and quota-capped pool
+        headroom, tagged with this runtime's lane id and width."""
+        from repro.serve.router import LaneLoad
+        pool = self.pool
+        headroom = (pool.headroom if hasattr(pool, "headroom")
+                    else pool.n_free_blocks)
+        return LaneLoad(lane=self.lane, n_mux=self.n_mux,
+                        slots=self.n_mux * self.nrows,
+                        active=self.sched.n_active,
+                        queue_depth=self.sched.queue_depth,
+                        headroom_blocks=headroom,
+                        mid_prefill=len(self.sched.prefill_progress))
+
+    def check_compile_once(self):
+        """Assert the compile-once contract (DESIGN.md §step runtime):
+        exactly one decode program and at most one program per declared
+        prefill bucket have been traced since construction.  Width-lane
+        serving calls this per lane — the contract holds *per width*,
+        each lane owning its own step set."""
+        counts = dict(self.trace_counts)
+        if counts.pop("decode", 0) > 1:
+            raise AssertionError(
+                f"decode step re-traced: {self.trace_counts}")
+        legal = {f"prefill_{b}" for b in self.buckets}
+        for k, v in counts.items():
+            if k not in legal:
+                raise AssertionError(
+                    f"unexpected traced program {k!r} "
+                    f"(declared buckets {sorted(self.buckets)})")
+            if v > 1:
+                raise AssertionError(
+                    f"prefill bucket {k} re-traced: {self.trace_counts}")
+
     def step(self):
-        """One engine step: execute this step's plans — admissions, one
-        prefill chunk per joining row, one decode over the grid."""
+        """One engine step: execute this step's batch of scheduler plans.
+
+        The plan/execute contract (DESIGN.md §step runtime; the plan
+        types are documented in ``serve.scheduler``):
+
+        1. **Admissions** — for each ``AdmitPlan``, allocate the group's
+           blocks from the plan's pool shard and register the row; a
+           failed allocation is rolled back lane-/shard-locally
+           (``cancel_admit``) and re-planned onto sibling shards.
+        2. **Prefill chunks** — one ``PrefillChunkPlan`` per mid-prefill
+           row: advance that row's prompt by one shape-bucketed chunk
+           through the jitted chunk step (or the whole prompt eagerly
+           under blocking prefill).
+        3. **Decode** — the ``DecodePlan``'s rows advance one token in
+           ONE jitted decode call over the grid; rows whose block append
+           exhausts the pool are preempted first (``preempt_row``).
+        4. **Frees** — drained rows (``FreePlan``) return their blocks.
+
+        Every plan executed here carries this runtime's ``lane`` id and
+        a ``shard`` scope where relevant; the runtime never executes a
+        plan from another lane's scheduler (lane isolation is
+        structural — one scheduler, pool and step set per lane)."""
         self._exec_admissions()
         for plan in self.sched.plan_chunks(self.chunk):
             self._exec_chunk(plan)

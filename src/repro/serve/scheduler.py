@@ -52,37 +52,75 @@ class StreamSlot:
 
 @dataclass(frozen=True)
 class AdmitPlan:
-    """A newly formed mux group: allocate blocks for ``total`` tokens and
-    begin (chunked) prefill of ``tokens``.  ``shard`` is the data shard
-    owning the row under mesh serving (0 when unsharded) — the runtime's
-    allocation draws from exactly that shard's pool segment, and a
-    rollback (``cancel_admit``) touches only that shard's row."""
+    """A newly formed mux group: the plan/execute contract's *admission*
+    leg (DESIGN.md §step runtime).
+
+    The scheduler has already placed the group's requests into row
+    ``row``'s slots when it emits this plan; the runtime must then either
+    EXECUTE it — allocate blocks for ``total`` tokens from the row's pool
+    (segment), reset them, and let chunked prefill of ``tokens`` begin —
+    or ROLL IT BACK with ``cancel_admit`` if the allocation fails.  No
+    third outcome is legal: an un-executed, un-cancelled plan leaves the
+    slot grid claiming requests the cache knows nothing about.
+
+    Scope fields:
+
+    * ``shard`` — the data shard owning the row under mesh serving
+      (0 when unsharded; DESIGN.md §sharded serving).  The runtime's
+      allocation draws from exactly that shard's pool segment, and a
+      rollback touches only that shard's row and the queue head.
+    * ``lane``  — the serving lane that owns the emitting scheduler
+      (0 outside width-lane serving; DESIGN.md §width lanes).  Every
+      plan a lane's scheduler emits is tagged with the lane id, so plan
+      consumers can assert plans never cross lanes — each lane has its
+      own scheduler, runtime, pool partition and jitted step set.
+    """
     row: int
     placed: tuple                 # ((slot, request), ...)
     tokens: np.ndarray            # (N_mux, total) padded current sequences
     total: int                    # padded group length
     shard: int = 0                # owning data shard (row -> shard map)
+    lane: int = 0                 # owning serving lane (width-lane serving)
 
 
 @dataclass(frozen=True)
 class PrefillChunkPlan:
     """Advance row ``row``'s prefill by ``length`` tokens starting at
-    ``start``; ``last`` marks the chunk that completes the prompt (its
-    final-position logits seed the row's first generated token)."""
+    ``start`` (absolute offsets into the row's padded prompt).
+
+    Emitted once per mid-prefill row per engine step, so a joining row
+    advances chunk by chunk while live rows keep decoding (DESIGN.md
+    §step runtime, "chunk cadence").  ``last`` marks the chunk that
+    completes the prompt: the runtime samples the row's first generated
+    token from that chunk's final-valid-position logits and the row
+    joins the decode grid.  ``lane`` scopes the plan to its emitting
+    lane (see ``AdmitPlan``)."""
     row: int
     start: int
     length: int
     last: bool
+    lane: int = 0                 # owning serving lane
 
 
 @dataclass(frozen=True)
 class DecodePlan:
+    """The set of rows that decode one token this engine step: active
+    rows not mid-prefill.  The runtime executes the whole set as ONE
+    jitted decode call over the lane's N_mux × B grid (inactive rows ride
+    along at position -1 and are masked).  ``lane`` scopes the plan to
+    its emitting lane (see ``AdmitPlan``)."""
     rows: tuple                   # rows that decode one token this step
+    lane: int = 0                 # owning serving lane
 
 
 @dataclass(frozen=True)
 class FreePlan:
+    """A drained row (no live stream): the runtime returns the row's
+    blocks to its pool (segment) if it still holds any.  Emitted AFTER
+    retirement, so the runtime frees exactly once per drain.  ``lane``
+    scopes the plan to its emitting lane (see ``AdmitPlan``)."""
     row: int                      # drained row (blocks may be returned)
+    lane: int = 0                 # owning serving lane
 
 
 @dataclass
@@ -96,6 +134,11 @@ class ContinuousScheduler:
     # visits rows interleaved across shards so trickle load spreads over
     # every shard's pool instead of piling onto shard 0.
     n_shards: int = 1
+    # serving-lane id under width-lane serving (DESIGN.md §width lanes):
+    # every plan this scheduler emits is tagged with it, and cancel /
+    # preempt back-channels only ever touch this scheduler's own slots
+    # and queue — lane isolation is structural, not policed.
+    lane: int = 0
     queue: collections.deque = field(default_factory=collections.deque)
     slots: list = field(init=False)
     steps: int = field(default=0, init=False)
@@ -210,7 +253,7 @@ class ContinuousScheduler:
             self.prefill_progress[j] = [0, tokens.shape[1]]
             plans.append(AdmitPlan(row=j, placed=tuple(placed),
                                    tokens=tokens, total=tokens.shape[1],
-                                   shard=self.shard_of(j)))
+                                   shard=self.shard_of(j), lane=self.lane))
         return plans
 
     def cancel_admit(self, plan: AdmitPlan):
@@ -233,7 +276,8 @@ class ContinuousScheduler:
             n = total - filled if chunk is None else min(chunk,
                                                         total - filled)
             plans.append(PrefillChunkPlan(row=j, start=filled, length=n,
-                                          last=filled + n >= total))
+                                          last=filled + n >= total,
+                                          lane=self.lane))
         return plans
 
     def chunk_done(self, row: int, n: int) -> bool:
@@ -250,12 +294,14 @@ class ContinuousScheduler:
         """Rows that decode this step: active and not mid-prefill."""
         return DecodePlan(rows=tuple(
             j for j in range(self.backbone_batch)
-            if j not in self.prefill_progress and self.row_active(j)))
+            if j not in self.prefill_progress and self.row_active(j)),
+            lane=self.lane)
 
     def plan_frees(self):
         """Drained rows (no live stream); the runtime returns their
         blocks if it still holds any."""
-        return [FreePlan(row=j) for j in range(self.backbone_batch)
+        return [FreePlan(row=j, lane=self.lane)
+                for j in range(self.backbone_batch)
                 if j not in self.prefill_progress
                 and not self.row_active(j)]
 
@@ -327,4 +373,15 @@ class ContinuousScheduler:
                    for i in range(self.n_mux))
 
     def utilization(self) -> float:
+        """Occupied fraction of the N_mux × backbone_batch slot grid in
+        [0, 1] — live streams over total stream slots.  Queued requests
+        do not count (see ``queue_depth``); a mid-prefill row's placed
+        streams DO count (they hold their slots from admission on).  One
+        of the three live-load signals ``serve.router.LaneRouter`` reads
+        per lane (with queue depth and pool headroom)."""
         return self.n_active / (self.n_mux * self.backbone_batch)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (submitted, not yet placed)."""
+        return len(self.queue)

@@ -313,3 +313,77 @@ def test_paged_write_disjoint_rows_do_not_collide():
     for r in range(3):
         np.testing.assert_array_equal(np.asarray(kc[r, :4]),
                                       np.full((4, hk, hd), float(r + 1)))
+
+
+# ---------------------------------------------------------------- quotas
+
+def test_quota_caps_allocation_below_capacity():
+    """A lane quota gates the allocator below the device ceiling: blocks
+    beyond the quota stay on the free list but are not handed out."""
+    p = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4, quota=3)
+    assert p.headroom == 3
+    p.allocate("a", 12)                  # exactly the 3-block quota
+    assert p.headroom == 0 and p.n_free_blocks == 5
+    with pytest.raises(PoolExhausted):
+        p.allocate("b", 1)               # free blocks exist, quota doesn't
+    p.check_invariants()
+    p.free("a")
+    assert p.headroom == 3
+
+
+def test_quota_shrink_below_usage_blocks_growth_only():
+    """Shrinking a quota below current usage reclaims nothing: live
+    blocks stay live, and new allocations wait for drains."""
+    p = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    p.allocate("a", 12)                  # 3 blocks, uncapped
+    p.set_quota(1)
+    assert p.headroom == 0 and p.n_used_blocks == 3
+    with pytest.raises(PoolExhausted):
+        p.append("a", 4)                 # boundary crossing needs a block
+    p.free("a")                          # drain; quota now funds 1 block
+    assert p.headroom == 1
+    p.allocate("b", 4)
+    p.check_invariants()
+
+
+def test_quota_none_uncaps():
+    p = KVPool(num_blocks=5, block_size=4, max_blocks_per_seq=4, quota=0)
+    with pytest.raises(PoolExhausted):
+        p.allocate("a", 1)
+    p.set_quota(None)
+    p.allocate("a", 1)
+    assert p.headroom == 3
+
+
+def test_sharded_pool_quota_splits_per_shard():
+    """An aggregate quota splits evenly across shards, so a lane cannot
+    borrow headroom a single shard does not actually have."""
+    p = ShardedKVPool(num_blocks=12, block_size=4, max_blocks_per_seq=4,
+                      n_shards=2, n_rows=2)
+    p.set_quota(4)
+    assert p.quota == 4 and p.headroom == 4
+    p.allocate(0, 8)                     # 2 blocks on shard 0 = its quota
+    with pytest.raises(PoolExhausted):
+        p.allocate(1, 12)                # shard 1 quota is 2, needs 3
+    assert p.headroom == 2               # shard 1's remaining quota
+    p.set_quota(None)
+    assert p.quota is None
+    p.allocate(1, 12)
+    p.check_invariants()
+
+
+def test_sharded_pool_quota_shrink_floors_at_shard_usage():
+    """A quota shrink (rebalance donation) must never drop a hot shard
+    below its live blocks: only genuinely unused headroom moves.  Here
+    shard 0 holds 5 live blocks while shard 1 is idle; shrinking the
+    aggregate quota from 12 to 8 must leave shard 0 able to keep (and
+    grow into) its usage rather than splitting 4/4 and stranding it."""
+    p = ShardedKVPool(num_blocks=16, block_size=4, max_blocks_per_seq=6,
+                      n_shards=2, n_rows=2)
+    p.set_quota(12)
+    p.allocate(0, 20)                    # 5 live blocks, all on shard 0
+    p.set_quota(8)                       # donate 4 blocks of spare quota
+    assert p._shards[0].quota >= 5       # floor at live usage
+    assert p.quota == 8
+    assert p.append(0, 4)                # 6th block still allocatable
+    p.check_invariants()

@@ -1,0 +1,276 @@
+"""Width-lane router: SLO preference orders, saturation spill-over,
+quota partitioning/rebalancing, and end-to-end lane serving edge cases
+(DESIGN.md §width lanes)."""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MuxSpec
+from repro.configs import get_config
+from repro.models import TransformerLM
+from repro.serve import Request, ServeConfig
+from repro.serve.kvpool import KVPool, blocks_for
+from repro.serve.router import (LaneRouter, LaneSpec, LaneLoad,
+                                SLO_LATENCY, SLO_BALANCED, SLO_THROUGHPUT)
+from repro.launch.serve import run_continuous
+
+
+# --------------------------------------------------------------- fakes
+
+class FakeLane:
+    """Duck-typed ServeRuntime: static spec + a mutable load snapshot."""
+
+    def __init__(self, lane, n_mux, rows=2, *, capacity=32, block_size=4,
+                 queue_depth=0, active=0, headroom=None):
+        self.lane = lane
+        self.n_mux = n_mux
+        self.nrows = rows
+        mbs = blocks_for(capacity, block_size)
+        self.sc = SimpleNamespace(capacity=capacity, block_size=block_size,
+                                  max_blocks_per_seq=mbs)
+        self.pool = KVPool(num_blocks=rows * mbs + 1, block_size=block_size,
+                           max_blocks_per_seq=mbs)
+        self.queue_depth = queue_depth
+        self.active = active
+        self.headroom = headroom
+
+    def load(self):
+        return LaneLoad(lane=self.lane, n_mux=self.n_mux,
+                        slots=self.n_mux * self.nrows, active=self.active,
+                        queue_depth=self.queue_depth,
+                        headroom_blocks=(self.pool.headroom
+                                         if self.headroom is None
+                                         else self.headroom))
+
+
+def mk_router(widths=(1, 4, 8), **kw):
+    lanes = [FakeLane(i, w) for i, w in enumerate(widths)]
+    return LaneRouter(lanes, **kw), lanes
+
+
+def req(uid=0, plen=4, max_new=4, slo=None):
+    return Request(uid=uid, prompt=list(range(1, plen + 1)),
+                   max_new=max_new, slo=slo)
+
+
+# ------------------------------------------------------ routing policy
+
+def test_slo_preference_orders():
+    router, _ = mk_router((1, 4, 8))
+    assert router._pref_order(SLO_LATENCY) == [0, 1, 2]
+    assert router._pref_order(SLO_THROUGHPUT) == [2, 1, 0]
+    # balanced rides the middle lane, then spills wider before narrower
+    assert router._pref_order(SLO_BALANCED) == [1, 2, 0]
+
+
+def test_idle_lanes_route_by_slo_class():
+    router, _ = mk_router((1, 4, 8))
+    assert router.route(req(0, slo=SLO_LATENCY)) == 0
+    assert router.route(req(1, slo=SLO_THROUGHPUT)) == 2
+    assert router.route(req(2, slo=SLO_BALANCED)) == 1
+    r = req(3, slo=None)                    # missing SLO means balanced
+    assert router.route(r) == 1
+    assert r.slo == SLO_BALANCED and r.lane == 1
+    assert router.counters["routed"] == {"latency": 1, "balanced": 2,
+                                         "throughput": 1}
+    assert router.counters["demotions"] == 0
+    assert router.counters["promotions"] == 0
+
+
+def test_unknown_slo_raises():
+    router, _ = mk_router((1, 4))
+    with pytest.raises(ValueError, match="unknown SLO"):
+        router.route(req(0, slo="best-effort"))
+
+
+def test_saturated_latency_lane_demotes_wider():
+    """Queue past one full grid on the narrow lane spills a latency
+    request wider — a demotion (quality tax instead of queueing)."""
+    router, lanes = mk_router((1, 4, 8))
+    lanes[0].queue_depth = lanes[0].n_mux * lanes[0].nrows       # = slots
+    r = req(0, slo=SLO_LATENCY)
+    assert router.route(r) == 1 and r.lane == 1
+    assert router.counters["demotions"] == 1
+
+
+def test_pool_exhausted_lane_spills():
+    """Zero allocatable blocks saturates a lane even with an empty
+    queue (admissions could only roll back)."""
+    router, lanes = mk_router((1, 4))
+    lanes[0].headroom = 0
+    assert router.route(req(0, slo=SLO_LATENCY)) == 1
+    assert router.counters["demotions"] == 1
+
+
+def test_saturated_wide_lane_promotes_narrower():
+    router, lanes = mk_router((1, 4, 8))
+    lanes[2].queue_depth = lanes[2].n_mux * lanes[2].nrows
+    r = req(0, slo=SLO_THROUGHPUT)
+    assert router.route(r) == 1 and r.lane == 1
+    assert router.counters["promotions"] == 1
+
+
+def test_all_saturated_picks_least_pressure():
+    """No lane is ever refused outright: with every eligible lane
+    saturated the router picks the least-pressured one."""
+    router, lanes = mk_router((1, 4))
+    lanes[0].queue_depth = 6                # pressure 6/2 = 3.0
+    lanes[1].queue_depth = 9                # pressure 9/8 ≈ 1.1
+    assert router.route(req(0, slo=SLO_LATENCY)) == 1
+    assert router.route(req(1, slo=SLO_THROUGHPUT)) == 1
+
+
+def test_oversized_request_skips_small_lane():
+    lanes = [FakeLane(0, 1, capacity=8), FakeLane(1, 4, capacity=64)]
+    router = LaneRouter(lanes)
+    assert router.route(req(0, plen=16, max_new=8, slo=SLO_LATENCY)) == 1
+    with pytest.raises(ValueError, match="fits no lane"):
+        router.route(req(1, plen=100, max_new=8))
+
+
+def test_duplicate_widths_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        mk_router((2, 2))
+
+
+# --------------------------------------------------- quota partitioning
+
+def test_budget_partition_conserves_and_respects_ceilings():
+    router, lanes = mk_router((1, 4, 8), budget=30)
+    quotas = [ln.pool.quota for ln in lanes]
+    ceilings = [ln.pool.num_blocks - 1 for ln in lanes]
+    assert sum(quotas) == 30
+    assert all(0 < q <= c for q, c in zip(quotas, ceilings))
+    # every lane can fund at least one row
+    assert all(q >= ln.sc.max_blocks_per_seq
+               for q, ln in zip(quotas, lanes))
+
+
+def test_budget_bounds_validated():
+    with pytest.raises(ValueError, match="exceeds total"):
+        mk_router((1, 4), budget=10_000)
+    with pytest.raises(ValueError, match="one row per lane"):
+        mk_router((1, 4), budget=2)
+
+
+def test_rebalance_moves_unused_quota_to_queued_lane():
+    router, lanes = mk_router((1, 4), budget=24)
+    before = [ln.pool.quota for ln in lanes]
+    lanes[1].queue_depth = 8                # two queued groups of N=4
+    moved = router.rebalance()
+    after = [ln.pool.quota for ln in lanes]
+    assert moved > 0
+    assert sum(after) == sum(before) == 24              # conserved
+    assert after[1] > before[1] and after[0] < before[0]
+    # the donor keeps one row's worth of reserve
+    assert after[0] >= lanes[0].sc.max_blocks_per_seq
+    assert router.counters["rebalanced_blocks"] == moved
+
+
+def test_rebalance_never_strands_live_blocks():
+    """Only UNUSED quota moves: a donor's quota never drops below its
+    live usage + reserve, and ceilings are respected."""
+    router, lanes = mk_router((1, 4), budget=24)
+    lanes[0].pool.allocate("row0", 8)       # live blocks on the donor
+    lanes[1].queue_depth = 50               # unbounded demand
+    router.rebalance()
+    assert lanes[0].pool.quota >= (lanes[0].pool.n_used_blocks
+                                   + lanes[0].sc.max_blocks_per_seq)
+    assert lanes[1].pool.quota <= lanes[1].pool.num_blocks - 1
+    assert sum(ln.pool.quota for ln in lanes) == 24
+
+
+def test_rebalance_noop_without_budget():
+    router, lanes = mk_router((1, 4))
+    lanes[1].queue_depth = 4
+    assert router.rebalance() == 0
+    assert all(ln.pool.quota is None for ln in lanes)
+
+
+# ------------------------------------------------- end-to-end lane runs
+
+ROWS = 2
+
+
+@pytest.fixture(scope="module")
+def lane_model():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = {w: TransformerLM.init(jax.random.fold_in(key, w), cfg,
+                                    MuxSpec(n=w)) for w in (1, 2)}
+    return cfg, params
+
+
+def _base_sc(cfg):
+    return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=1), capacity=24,
+                       dtype=jnp.float32, cache_layout="paged",
+                       block_size=4)
+
+
+def _arrivals(cfg, n, slo, *, every=1, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(i * every,
+             rng.integers(4, cfg.vocab_size, size=(6,)).astype(np.int32),
+             3, None, slo) for i in range(n)]
+
+
+def test_all_latency_mix_degenerates_to_narrowest_lane(lane_model):
+    """An all-latency trace leaves the wide lane EMPTY: every request
+    lands on (and completes in) the N=1 lane, the wide lane traces no
+    program, and the idle lane never stalls the drain loop."""
+    cfg, params = lane_model
+    stats = run_continuous(params, _base_sc(cfg), ROWS,
+                           _arrivals(cfg, 4, "latency", every=3),
+                           chunk=4, lanes=(1, 2))
+    assert len(stats["completed"]) == 4
+    assert all(r.lane == 0 for r in stats["completed"])
+    assert stats["routing"]["routed"]["latency"] == 4
+    wide = stats["lanes"][1]
+    assert not wide["completed"] and wide["trace_counts"] == {}
+    assert wide["decode_steps"] == 0
+
+
+def test_latency_burst_spills_into_wide_lane(lane_model):
+    """A same-step latency burst past the narrow lane's spill threshold
+    demotes the overflow into the wide lane; every request completes
+    and lane tags match where each was served."""
+    cfg, params = lane_model
+    stats = run_continuous(params, _base_sc(cfg), ROWS,
+                           _arrivals(cfg, 6, "latency", every=0),
+                           chunk=4, lanes=(1, 2))
+    assert len(stats["completed"]) == 6
+    assert stats["routing"]["demotions"] > 0
+    by_lane = {ls["lane"]: {r.uid for r in ls["completed"]}
+               for ls in stats["lanes"]}
+    assert by_lane[1]                         # overflow really served wide
+    for r in stats["completed"]:
+        assert r.uid in by_lane[r.lane]
+    for ls in stats["lanes"]:                 # compile-once per width
+        assert ls["trace_counts"].get("decode", 0) <= 1
+
+
+def test_lane_backpressure_stays_lane_local(lane_model):
+    """An undersized narrow-lane pool (forced via a tight global budget)
+    must roll back / retry within that lane only — the wide lane's
+    requests and pool are untouched and everything completes."""
+    cfg, params = lane_model
+    sc = _base_sc(cfg)
+    mbs = sc.max_blocks_per_seq                     # 6 blocks @ cap 24
+    arrivals = (_arrivals(cfg, 3, "latency", every=0)
+                + _arrivals(cfg, 2, "throughput", every=0, seed=1))
+    stats = run_continuous(params, sc, ROWS, arrivals, chunk=4,
+                           lanes=(1, 2), pool_budget=2 * mbs + mbs,
+                           spill_queue=100)         # no spill: queue local
+    assert len(stats["completed"]) == 5
+    for pool in stats["pools"]:
+        assert pool.n_used_blocks == 0
+        pool.check_invariants()
+    assert stats["routing"]["routed"]["latency"] == 3
+    assert stats["routing"]["routed"]["throughput"] == 2
+    assert all(r.lane == 0 for r in stats["completed"]
+               if r.slo == "latency")
+    assert all(r.lane == 1 for r in stats["completed"]
+               if r.slo == "throughput")

@@ -97,6 +97,60 @@ def test_utilization_under_light_load():
     assert s.utilization() == 1 / 8
 
 
+def test_utilization_lifecycle():
+    """utilization() tracks live streams over slots through the whole
+    lifecycle: empty -> queued (still 0) -> admitted -> full -> retired."""
+    s = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64)
+    assert s.utilization() == 0.0 and s.queue_depth == 0
+    s.submit(mk_req(0, max_new=1))
+    # queued-but-unadmitted requests occupy no slot
+    assert s.utilization() == 0.0 and s.queue_depth == 1
+    s.submit(mk_req(1, max_new=1))
+    s.admit_paged()                          # both group into row 0
+    assert s.utilization() == 0.5 and s.queue_depth == 0
+    for i in range(2, 4):
+        s.submit(mk_req(i, max_new=1))
+    s.admit_paged()
+    assert s.utilization() == 1.0
+    # retiring a whole row's streams frees exactly that row's share
+    s.record_row_tokens(0, [9, 9])
+    assert s.utilization() == 0.5
+    s.record_row_tokens(1, [9, 9])
+    assert s.utilization() == 0.0
+
+
+def test_utilization_counts_mid_prefill_rows():
+    """A row mid-way through chunked prefill holds its slots from
+    admission on — plan_admissions must raise utilization immediately,
+    and the mid-prefill row is excluded from the decode plan."""
+    s = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64)
+    s.submit(mk_req(0, plen=8))
+    plans = s.plan_admissions()
+    assert len(plans) == 1 and plans[0].lane == 0
+    assert s.utilization() == 0.25
+    assert s.plan_decode().rows == ()         # still prefilling
+    s.chunk_done(0, 8)
+    assert s.plan_decode().rows == (0,)
+    assert s.utilization() == 0.25
+
+
+def test_plans_carry_lane_tag():
+    """Every plan a lane's scheduler emits is tagged with its lane id
+    (width-lane serving routes plans by construction; the tag lets
+    consumers assert nothing ever crosses lanes)."""
+    s = ContinuousScheduler(n_mux=1, backbone_batch=1, max_len=64, lane=3)
+    s.submit(mk_req(0, plen=4, max_new=1))
+    (ap,) = s.plan_admissions()
+    assert ap.lane == 3 and ap.shard == 0
+    (cp,) = s.plan_chunks(2)
+    assert cp.lane == 3
+    s.chunk_done(0, 4)
+    assert s.plan_decode().lane == 3
+    s.record_row_tokens(0, [9])               # retires (max_new=1)
+    (fp,) = s.plan_frees()
+    assert fp.lane == 3
+
+
 @pytest.mark.parametrize("hkv,window", [(2, None), (2, 24), (8, None)])
 def test_decode_attention_kernel(hkv, window):
     from repro.kernels import ops, ref

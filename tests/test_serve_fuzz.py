@@ -9,7 +9,12 @@ prompt length, generation budget, pool pressure) are served through:
   * mesh-sharded    — paged-chunked on a ('data', 'model') device mesh
                       (degenerates to (1, 1) on a single-device run; the
                       devices=8 CI job exercises real shards via
-                      REPRO_TEST_DEVICES).
+                      REPRO_TEST_DEVICES);
+  * width lanes     — SLO-routed lanes at mux widths 1/4/8
+                      (``run_continuous(lanes=...)``): each lane's
+                      routed sub-schedule must be token-identical to a
+                      fixed-width run at that lane's N, with compile
+                      counts of 1 decode + one per bucket per width.
 
 All paged arms must emit token-identical greedy streams per request, and
 each stream must equal its solo ``greedy_generate`` output.  The ring
@@ -37,6 +42,7 @@ from repro.core import MuxSpec
 from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig, greedy_generate
+from repro.serve.router import SLO_CLASSES
 from repro.launch.mesh import make_serve_mesh
 from repro.launch.serve import run_continuous
 
@@ -166,6 +172,61 @@ def _fuzz_pressure_once(cfg, params, seed):
                                       np.asarray(want))
 
 
+LANE_WIDTHS = (1, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def lane_models():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    params = {w: TransformerLM.init(jax.random.fold_in(KEY, w), cfg,
+                                    MuxSpec(n=w)) for w in LANE_WIDTHS}
+    return cfg, params
+
+
+def _paged_sc_width(cfg, w):
+    return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=w),
+                       capacity=CAPACITY, dtype=jnp.float32,
+                       cache_layout="paged", block_size=BLOCK)
+
+
+def _fuzz_lanes_once(cfg, params_by_width, seed):
+    """Lane parity (DESIGN.md §width lanes): serve a random churn
+    schedule with mixed SLO classes through lanes at widths 1/4/8, then
+    replay each lane's routed sub-schedule through a fixed-width
+    ``ServeRuntime`` at that lane's N — every request's tokens must be
+    identical, and compile counts must stay 1 decode + one per used
+    bucket *per width*."""
+    arrivals = _schedule(cfg, seed)
+    rng = np.random.default_rng(seed + 99)
+    lane_arrivals = [(t, p.copy(), m, None, str(rng.choice(SLO_CLASSES)))
+                     for t, p, m in arrivals]
+    stats = run_continuous(params_by_width, _paged_sc(cfg), ROWS,
+                           lane_arrivals, chunk=4, lanes=LANE_WIDTHS)
+    assert len(stats["completed"]) == len(arrivals), "lanes dropped requests"
+    for pool in stats["pools"]:
+        assert pool.n_used_blocks == 0
+        pool.check_invariants()
+    for ls in stats["lanes"]:
+        # compile-once per width: a lane that served anything traced its
+        # decode step exactly once, and each bucket at most once
+        # (_run_lanes also runs check_compile_once before returning)
+        served = bool(ls["completed"])
+        assert ls["trace_counts"].get("decode", 0) == int(served)
+        assert all(v == 1 for v in ls["trace_counts"].values())
+        if not served:
+            continue
+        routed = sorted(ls["completed"], key=lambda r: r.uid)
+        assert all(r.lane == ls["lane"] for r in routed)
+        sub = [(r.routed_step, np.asarray(r.prompt, np.int32), r.max_new)
+               for r in routed]
+        fixed = _run_arm(params_by_width[ls["n_mux"]],
+                         _paged_sc_width(cfg, ls["n_mux"]), sub, chunk=4)
+        for i, r in enumerate(routed):
+            assert fixed[i] == (tuple(r.prompt), list(r.output)), (
+                f"lane {ls['lane']} (N={ls['n_mux']}) diverged from the "
+                f"fixed-width run for uid {r.uid}")
+
+
 # ------------------------------------------------- deterministic sweeps
 
 @pytest.mark.parametrize("seed", [0, 1])
@@ -182,6 +243,12 @@ def test_fuzz_aligned_deterministic(model):
 def test_fuzz_pool_pressure_deterministic(model):
     cfg, params = model
     _fuzz_pressure_once(cfg, params, 3)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_lane_parity_deterministic(lane_models, seed):
+    cfg, params_by_width = lane_models
+    _fuzz_lanes_once(cfg, params_by_width, seed)
 
 
 # ------------------------------------------------- hypothesis variants

@@ -1,0 +1,193 @@
+#!/usr/bin/env python
+"""Smoke-check the shell blocks in README.md / DESIGN.md so docs can't rot.
+
+Every fenced ``bash``/``sh``/``shell`` block is parsed into commands
+(line continuations joined, comments dropped), then each command is:
+
+  * **executed** when it is dryrun-safe — it contains ``--help`` or
+    invokes the analytic ``repro.launch.dryrun`` (no accelerator work,
+    bounded wall time); a non-zero exit fails the check;
+  * **statically validated** otherwise — ``python -m mod`` must resolve
+    to a module file in this repo, ``python path.py`` to an existing
+    file, ``make target`` to a Makefile target, and every ``--flag`` of
+    a repro/benchmarks CLI must appear in that CLI's ``--help`` output
+    (so a renamed flag breaks the docs check, not a user).
+
+Run from the repo root (CI: ``make docs-check``):
+
+    python tools/docs_check.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "DESIGN.md")
+SHELL_INFO = {"bash", "sh", "shell"}
+RUN_TIMEOUT = 300
+_HELP_CACHE: dict = {}
+
+
+def shell_blocks(text: str):
+    out, lines, i = [], text.splitlines(), 0
+    while i < len(lines):
+        m = re.match(r"^```(\w+)\s*$", lines[i])
+        if m and m.group(1) in SHELL_INFO:
+            j = i + 1
+            buf = []
+            while j < len(lines) and not lines[j].startswith("```"):
+                buf.append(lines[j])
+                j += 1
+            out.append("\n".join(buf))
+            i = j
+        i += 1
+    return out
+
+
+def commands(block: str):
+    """Join backslash continuations, drop blanks/comments."""
+    cmds, cur = [], ""
+    for ln in block.splitlines():
+        ln = ln.rstrip()
+        if not ln.strip() or ln.lstrip().startswith("#"):
+            continue
+        cur += (" " if cur else "") + ln.rstrip("\\").strip()
+        if not ln.endswith("\\"):
+            cmds.append(cur)
+            cur = ""
+    if cur:
+        cmds.append(cur)
+    return cmds
+
+
+def split_env(cmd: str):
+    """Split 'K=V ... prog args' into (env assignments, argv)."""
+    toks = shlex.split(cmd)
+    env = {}
+    while toks and "=" in toks[0] and not toks[0].startswith("-"):
+        k, _, v = toks[0].partition("=")
+        env[k] = v
+        toks = toks[1:]
+    return env, toks
+
+
+def module_file(mod: str):
+    """Repo file backing 'repro.x.y' / 'benchmarks.x' module paths."""
+    parts = mod.split(".")
+    if parts[0] == "repro":
+        base = ROOT / "src"
+    elif parts[0] == "benchmarks":
+        base = ROOT
+    else:
+        return None                      # third-party (pytest, ...)
+    p = base.joinpath(*parts)
+    for cand in (p.with_suffix(".py"), p / "__init__.py"):
+        if cand.is_file():
+            return cand
+    return False                         # repo module that does NOT exist
+
+
+def cli_help(mod: str):
+    if mod not in _HELP_CACHE:
+        r = subprocess.run(
+            [sys.executable, "-m", mod, "--help"], cwd=ROOT,
+            capture_output=True, text=True, timeout=120,
+            env=_env({}))
+        _HELP_CACHE[mod] = r.stdout + r.stderr if r.returncode == 0 else None
+    return _HELP_CACHE[mod]
+
+
+def _env(extra):
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + (":" + env["PYTHONPATH"]
+                            if env.get("PYTHONPATH") else ""))
+    env.update(extra)
+    return env
+
+
+def make_targets():
+    text = (ROOT / "Makefile").read_text()
+    return set(re.findall(r"^([A-Za-z0-9_-]+):", text, re.M))
+
+
+def is_dryrun_safe(toks):
+    return "--help" in toks or any("repro.launch.dryrun" in t
+                                   for t in toks)
+
+
+def check_command(cmd: str, doc: str):
+    """Returns (status, detail); status in {'ran', 'checked', 'skip',
+    'fail'}."""
+    env, toks = split_env(cmd)
+    if not toks:
+        return "skip", "env-only"
+    prog = toks[0]
+    if prog == "pip":
+        return "skip", "installer"
+    if prog == "make":
+        missing = [t for t in toks[1:] if not t.startswith("-")
+                   and t not in make_targets()]
+        return (("fail", f"unknown make target(s) {missing}") if missing
+                else ("checked", "make targets exist"))
+    if prog != "python" and not prog.endswith("/python"):
+        return "skip", f"unhandled program {prog!r}"
+
+    if is_dryrun_safe(toks):
+        r = subprocess.run(cmd, shell=True, cwd=ROOT, env=_env({}),
+                           capture_output=True, text=True,
+                           timeout=RUN_TIMEOUT)
+        if r.returncode != 0:
+            return "fail", (f"exit {r.returncode}: "
+                            f"{(r.stderr or r.stdout)[-400:]}")
+        return "ran", "exit 0"
+
+    # static validation
+    if "-m" in toks:
+        mod = toks[toks.index("-m") + 1]
+        mf = module_file(mod)
+        if mf is False:
+            return "fail", f"module {mod} not found in repo"
+        if mf is None:
+            return "checked", f"third-party module {mod}"
+        flags = [t.split("=")[0] for t in toks if t.startswith("--")]
+        if flags:
+            help_text = cli_help(mod)
+            if help_text is None:
+                return "fail", f"`python -m {mod} --help` failed"
+            missing = [f for f in flags if f not in help_text]
+            if missing:
+                return "fail", f"{mod}: unknown flag(s) {missing}"
+        return "checked", f"module + {len(flags)} flag(s) valid"
+    script = next((t for t in toks[1:] if t.endswith(".py")), None)
+    if script:
+        if not (ROOT / script).is_file():
+            return "fail", f"script {script} not found"
+        return "checked", "script exists"
+    return "skip", "nothing to validate"
+
+
+def main():
+    failures, n = [], 0
+    for doc in DOCS:
+        text = (ROOT / doc).read_text()
+        for block in shell_blocks(text):
+            for cmd in commands(block):
+                n += 1
+                status, detail = check_command(cmd, doc)
+                mark = {"ran": "RUN ", "checked": "OK  ",
+                        "skip": "SKIP", "fail": "FAIL"}[status]
+                print(f"[{mark}] ({doc}) {cmd}\n       -> {detail}")
+                if status == "fail":
+                    failures.append((doc, cmd, detail))
+    print(f"\ndocs-check: {n} commands, {len(failures)} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
