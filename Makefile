@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-mesh bench-smoke serve-smoke docs-check
+.PHONY: test test-mesh bench-smoke bench-json serve-smoke docs-check
 
 test:                      ## tier-1: full test suite
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
@@ -13,6 +13,12 @@ test-mesh:                 ## sharded serving + churn fuzz on 8 fake devices
 
 bench-smoke:               ## ring-vs-paged churn benchmark, tiny CPU budget
 	$(PY) -m benchmarks.serve_churn --smoke
+
+bench-json:                ## bench-smoke + persisted perf trajectory row
+	$(PY) -m benchmarks.serve_churn --smoke \
+	    --json BENCH_serve_churn.json \
+	    --metrics-out BENCH_serve_metrics.json \
+	    --trace-out BENCH_serve_trace.json
 
 serve-smoke:               ## continuous paged serving end-to-end
 	$(PY) -m repro.launch.serve --continuous --cache paged \

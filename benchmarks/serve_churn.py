@@ -40,9 +40,18 @@ one ``serve_churn,lanes/N<w>,...`` row per lane):
                        the no-stall claim, measured
   * slot_util        — mean occupied fraction of the N_mux × B grid
   * cache_util       — mean occupancy of the reserved cache memory
+  * slo_attainment   — fraction of requests whose TTFT met their SLO
+                       class's target (``router.DEFAULT_TTFT_SLO``;
+                       classless fixed-arm requests count as balanced)
+  * goodput_tok_s    — SLO attainment × tok_s: the goodput signal the
+                       lane router publishes per lane (the lanes arm's
+                       per-lane rows report each lane's own goodput)
 
 ``--json PATH`` additionally dumps every row (including the per-lane
-breakdown and routing counters) as JSON for trajectory tooling.
+breakdown and routing counters) as JSON for trajectory tooling;
+``--metrics-out`` / ``--trace-out`` attach a ``serve.telemetry``
+session to the lanes arm and persist its metrics snapshot (+ ``.prom``
+sibling) and Perfetto-loadable step-span trace.
 
 Runnable in reduced mode on CPU:
 
@@ -62,7 +71,8 @@ from repro.core import MuxSpec
 from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig
-from repro.serve.router import SLO_CLASSES
+from repro.serve.router import SLO_CLASSES, ttft_attainment
+from repro.serve.telemetry import Telemetry
 from repro.launch.serve import run_continuous
 
 
@@ -107,7 +117,8 @@ def latency_stats(completed):
 
 CSV_HEADER = ("serve_churn,arm,mux_n,tok_s,prefill_backbone,"
               "prefill_compute,prefill_events,ttft_p50,ttft_p95,"
-              "tpot_p50,tpot_p95,slot_util,cache_util,requests")
+              "tpot_p50,tpot_p95,slot_util,cache_util,requests,"
+              "slo_attainment,goodput_tok_s")
 
 
 def _csv(row):
@@ -117,7 +128,8 @@ def _csv(row):
           f"{row['ttft_p50']:.4f},{row['ttft_p95']:.4f},"
           f"{row['tpot_p50']:.4f},{row['tpot_p95']:.4f},"
           f"{row['slot_util']:.3f},{row['cache_util']:.3f},"
-          f"{row['requests']}")
+          f"{row['requests']},"
+          f"{row['slo_attainment']:.3f},{row['goodput_tok_s']:.2f}")
 
 
 def _mean(xs):
@@ -139,13 +151,20 @@ def _row(arm, mux_n, stats, completed, wall=None):
         "requests": len(completed),
     }
     row.update(latency_stats(completed))
+    # goodput = TTFT-SLO attainment × tok_s (DESIGN.md §observability);
+    # classless requests (the fixed arms) count against the balanced
+    # target, the lanes arm carries each request's own class
+    attain, measured = ttft_attainment(completed)
+    row["slo_attainment"] = attain
+    row["ttft_measured"] = measured
+    row["goodput_tok_s"] = attain * row["tok_s"]
     return row
 
 
 def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         n_requests=10, arrival_every=2.0, seed=0, block_size=8,
         chunk=8, prompt=(6, 16), new=(3, 10), lanes=(1, 2, 4),
-        json_path=None):
+        json_path=None, metrics_out=None, trace_out=None):
     cfg = get_config(arch, reduced=True)
     widths = sorted(set((mux_n,) + tuple(lanes)))
     # one trained model per mux width (MUX-PLMs are width-specific)
@@ -189,25 +208,46 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         _csv(row)
 
     if lanes:
+        # telemetry rides the lanes arm only: the fixed arms above stay
+        # the uninstrumented baseline the fuzz suite compares against
+        telemetry = (Telemetry() if metrics_out or trace_out else None)
         stats = run_continuous(params, sc_for(mux_n, "paged"), rows,
                                with_slo(trace_for(), seed), chunk=chunk,
-                               lanes=tuple(lanes))
+                               lanes=tuple(lanes), telemetry=telemetry)
         assert len(stats["completed"]) == n_requests
         agg = _row("lanes", "+".join(str(w) for w in lanes), stats,
                    stats["completed"])
         agg["widths"] = list(lanes)
         agg["routing"] = stats["routing"]
+        agg["lane_goodput"] = stats["lane_stats"]
         agg["lanes"] = []
+        by_lane = {ls["lane"]: ls for ls in stats["lane_stats"]}
         for ls in stats["lanes"]:
             lane_row = _row(f"lanes/N{ls['n_mux']}", ls["n_mux"], ls,
                             ls["completed"], wall=stats["wall"])
             lane_row["lane"] = ls["lane"]
             lane_row["rows"] = ls["rows"]
+            # the router's own goodput accounting for this lane (same
+            # numbers the lane_goodput_tok_s gauge publishes) overrides
+            # the generic classless recomputation from _row
+            g = by_lane.get(ls["lane"])
+            if g is not None:
+                lane_row["slo_attainment"] = g["slo_attainment"]
+                lane_row["ttft_measured"] = g["ttft_measured"]
+                if g["goodput_tok_s"] is not None:
+                    lane_row["goodput_tok_s"] = g["goodput_tok_s"]
             agg["lanes"].append(lane_row)
         results.append(agg)
         _csv(agg)
         for lane_row in agg["lanes"]:
             _csv(lane_row)
+        if telemetry is not None:
+            if metrics_out:
+                prom = telemetry.write_metrics(metrics_out)
+                print(f"serve_churn wrote {metrics_out} (+ {prom})")
+            if trace_out:
+                telemetry.write_trace(trace_out)
+                print(f"serve_churn wrote {trace_out}")
 
     if json_path:
         with open(json_path, "w") as f:
@@ -232,6 +272,12 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows (incl. per-lane breakdown and "
                          "routing counters) as JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the lanes arm's telemetry metrics "
+                         "snapshot as JSON (+ Prometheus .prom sibling)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the lanes arm's step-span trace as "
+                         "Chrome trace-event JSON (ui.perfetto.dev)")
     args = ap.parse_args()
     lanes = (tuple(int(x) for x in args.lanes.split(","))
              if args.lanes else ())
@@ -239,7 +285,8 @@ def main():
     t0 = time.time()
     run(arch=args.arch, mux_n=args.mux_n, rows=args.rows, n_requests=n,
         chunk=args.chunk, seed=args.seed, lanes=lanes,
-        json_path=args.json)
+        json_path=args.json, metrics_out=args.metrics_out,
+        trace_out=args.trace_out)
     print(f"serve_churn done in {time.time() - t0:.0f}s")
 
 

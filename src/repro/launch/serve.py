@@ -55,6 +55,7 @@ from repro.serve.engine import lane_config
 from repro.serve.router import LaneRouter, LaneSpec, SLO_CLASSES
 from repro.serve.runtime import ServeRuntime
 from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.telemetry import NULL_TELEMETRY, Telemetry
 
 
 def _sample_grid(sched, logits, default_sampling):
@@ -76,7 +77,7 @@ def _sample_grid(sched, logits, default_sampling):
 def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
                arrivals, lanes, *, pad_id, on_prefill, chunk, prefill_mode,
                default_sampling, mesh, use_kernels, pool_budget,
-               spill_queue):
+               spill_queue, telemetry):
     """Width-lane serve loop (DESIGN.md §width lanes): one ``ServeRuntime``
     per lane at that lane's mux width, ``LaneRouter`` admitting each
     arrival by SLO class + live lane load, all lanes stepping in lockstep
@@ -105,13 +106,13 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
             chunk=None if prefill_mode == "blocking" else spec.chunk,
             pad_id=pad_id, default_sampling=default_sampling,
             on_prefill=on_prefill, mesh=mesh, use_kernels=use_kernels,
-            lane=idx))
+            lane=idx, telemetry=telemetry))
     # step order: narrow lanes first, so the latency lane's admissions
     # land before wider lanes draw on freshly rebalanced quota
     step_order = sorted(range(len(runtimes)),
                         key=lambda i: runtimes[i].n_mux)
     router = LaneRouter(runtimes, budget=pool_budget,
-                        spill_queue=spill_queue)
+                        spill_queue=spill_queue, telemetry=telemetry)
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid, step = 0, 0
     t0 = time.time()
@@ -129,16 +130,20 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
         for i in step_order:
             runtimes[i].step()
         step += 1
+        telemetry.maybe_snapshot(step)
     for rt in runtimes:
         rt.check_compile_once()
+    wall = time.time() - t0
     completed = [r for rt in runtimes for r in rt.stats["completed"]]
     stats = {
+        # per-lane goodput accounting (TTFT-SLO attainment × tok/s)
+        "lane_stats": router.lane_stats(wall=wall),
         "lanes": [rt.stats for rt in runtimes],
         "widths": [s.n_mux for s in specs],
         "pools": [rt.pool for rt in runtimes],
         "routing": router.counters,
         "completed": completed,
-        "wall": time.time() - t0,
+        "wall": wall,
         "generated_tokens": sum(len(r.output) for r in completed),
         "prefill_mode": runtimes[0].stats["prefill_mode"],
         # aggregates over lanes (sums for counters, concatenation for
@@ -161,12 +166,19 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                    *, pad_id: int = 0, on_prefill=None, chunk: int = 32,
                    prefill_mode: str = "chunked", default_sampling=None,
                    mesh=None, use_kernels: bool = False, lanes=None,
-                   pool_budget=None, spill_queue=None):
+                   pool_budget=None, spill_queue=None, telemetry=None):
     """Continuous-batching serve loop for both cache layouts.
 
     arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams
     [, slo_class]]), sorted by step.  Each loop iteration admits what it
     can, then runs one decode step over the grid.  Returns a stats dict.
+
+    telemetry: optional ``serve.telemetry.Telemetry`` — streaming SLO
+    metrics, the step-span trace and periodic registry snapshots
+    (``Telemetry(snapshot_every=K)``), threaded through every layer of
+    the serve stack.  Telemetry never changes what is computed: token
+    streams and compile counts are identical with it on or off
+    (DESIGN.md §observability).
 
     mesh: optional ('data', 'model') mesh (``launch.mesh.make_serve_mesh``)
     for the paged runtime — rows/pool shards over 'data', tensor
@@ -203,6 +215,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
             "continuous serving supports decoder-only LM families")
     if mesh is not None and sc.cache_layout != "paged":
         raise ValueError("mesh serving requires the paged cache layout")
+    if telemetry is None:
+        telemetry = NULL_TELEMETRY
     if lanes is not None:
         if sc.cache_layout != "paged":
             raise ValueError(
@@ -212,7 +226,7 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                           prefill_mode=prefill_mode,
                           default_sampling=default_sampling, mesh=mesh,
                           use_kernels=use_kernels, pool_budget=pool_budget,
-                          spill_queue=spill_queue)
+                          spill_queue=spill_queue, telemetry=telemetry)
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid = 0
     t0 = time.time()
@@ -232,12 +246,13 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                           else chunk,
                           pad_id=pad_id, default_sampling=default_sampling,
                           on_prefill=on_prefill, mesh=mesh,
-                          use_kernels=use_kernels)
+                          use_kernels=use_kernels, telemetry=telemetry)
         step = 0
         while arrivals or rt.has_work():
             _pop_arrivals(step, rt.submit)
             rt.step()
             step += 1
+            telemetry.maybe_snapshot(step)
         stats = rt.stats
         stats["wall"] = time.time() - t0
         stats["generated_tokens"] = sum(
@@ -249,7 +264,7 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
     nrows = backbone_rows
     nb_inst = n_mux * nrows
     sched = ContinuousScheduler(n_mux=n_mux, backbone_batch=nrows,
-                                max_len=sc.capacity)
+                                max_len=sc.capacity, telemetry=telemetry)
     stats = {"prefill_tokens": 0, "prefill_compute_tokens": 0,
              "prefill_events": 0, "decode_steps": 0,
              "prefill_log": [], "slot_util": [], "cache_util": [],
@@ -284,8 +299,10 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
             for j, g in enumerate(grids):
                 arr[:, j, :g.shape[1]] = g
             cache = init_cache(sc, nb_inst)
-            logits, cache = prefill(params, sc, cache,
-                                    jnp.asarray(arr.reshape(nb_inst, l_pad)))
+            with telemetry.span("prefill", tokens=l_pad * nrows):
+                logits, cache = prefill(
+                    params, sc, cache,
+                    jnp.asarray(arr.reshape(nb_inst, l_pad)))
             grid_pos = l_pad
             stats["prefill_tokens"] += l_pad * nrows
             stats["prefill_compute_tokens"] += l_pad * nrows
@@ -301,9 +318,10 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
         if sched.n_active:
             _clear_dead_slots()
             toks_in = jnp.asarray(next_tok.reshape(-1))[:, None]
-            logits, cache = decode_step(params, sc, cache, toks_in,
-                                        grid_pos)
-            out = _sample_grid(sched, logits[:, 0], default_sampling)
+            with telemetry.span("decode", metric="decode_step_s"):
+                logits, cache = decode_step(params, sc, cache, toks_in,
+                                            grid_pos)
+                out = _sample_grid(sched, logits[:, 0], default_sampling)
             sched.record_tokens(out)
             next_tok = out.reshape(n_mux, nrows).astype(np.int32)
             stats["decode_steps"] += 1
@@ -315,6 +333,7 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                 min(grid_pos, sc.capacity) / sc.capacity
                 if sched.n_active else 0.0)
         step += 1
+        telemetry.maybe_snapshot(step)
     stats["wall"] = time.time() - t0
     stats["generated_tokens"] = sum(len(r.output) for r in sched.completed)
     return stats
@@ -452,6 +471,24 @@ def main(argv=None):
                          "decode kernel; interpret mode off-TPU)")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous: one request arrives every K steps")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="continuous: write telemetry metrics as JSON "
+                         "(counters/gauges/histograms keyed lane+shard, "
+                         "plus periodic snapshots) to PATH, and a "
+                         "Prometheus text dump next to it (.prom)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="continuous: write the step-span timeline as "
+                         "Chrome trace-event JSON to PATH (open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="STEPS",
+                    help="snapshot the metrics registry every K engine "
+                         "steps into the --metrics-out JSON (0 = final "
+                         "totals only)")
+    ap.add_argument("--trace-annotate", action="store_true",
+                    help="also wrap traced spans in jax.profiler trace "
+                         "annotations (visible when profiling with "
+                         "jax.profiler.trace)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature for all requests "
                          "(0 = greedy)")
@@ -511,6 +548,13 @@ def main(argv=None):
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=args.seed)
 
+    telemetry = None
+    if args.metrics_out or args.trace_out:
+        if not args.continuous:
+            ap.error("--metrics-out/--trace-out require --continuous")
+        telemetry = Telemetry(snapshot_every=args.metrics_interval,
+                              annotate=args.trace_annotate)
+
     if not args.continuous:
         _fill_drain(params, sc, cfg, kind, args, default_sampling)
         return 0
@@ -534,7 +578,8 @@ def main(argv=None):
                            chunk=args.chunk, prefill_mode=args.prefill,
                            default_sampling=default_sampling, mesh=mesh,
                            use_kernels=args.use_kernels, lanes=lanes,
-                           pool_budget=args.pool_budget)
+                           pool_budget=args.pool_budget,
+                           telemetry=telemetry)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
     # report the mode that actually ran (the runtime falls back to
@@ -570,10 +615,23 @@ def main(argv=None):
         print(f"routing: {routed}; demotions={rc['demotions']}, "
               f"promotions={rc['promotions']}, "
               f"rebalanced={rc['rebalanced_blocks']} blocks")
+        for ls in stats["lane_stats"]:
+            print(f"  lane{ls['lane']} N={ls['n_mux']}: goodput "
+                  f"{ls['goodput_tok_s']:.1f} tok/s "
+                  f"(TTFT-SLO attainment {ls['slo_attainment']:.2f} "
+                  f"× {ls['tok_s']:.1f} tok/s)")
     if "trace_counts" in stats:
         compiled = ", ".join(f"{k}×{v}"
                              for k, v in sorted(stats["trace_counts"].items()))
         print(f"compiled programs: {compiled}")
+    if telemetry is not None:
+        if args.metrics_out:
+            prom = telemetry.write_metrics(args.metrics_out)
+            print(f"metrics written to {args.metrics_out} (+ {prom})")
+        if args.trace_out:
+            telemetry.write_trace(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
     return 0
 
 

@@ -39,6 +39,14 @@ different mux widths served side by side, each request routed to a lane
 by its SLO class (latency / balanced / throughput) and live lane load —
 ``serve.router.LaneRouter`` + ``launch.serve run_continuous(lanes=...)``
 (CLI: ``--lanes 1,4,8 --slo-mix ...``).
+
+Observability (DESIGN.md §observability): pass a
+``serve.telemetry.Telemetry`` to ``ServeRuntime`` / ``LaneRouter`` /
+``run_continuous(telemetry=...)`` for streaming (lane, shard)-keyed SLO
+metrics (TTFT/TPOT/queue-wait histograms, pool gauges, preempt/cancel
+counters), a Perfetto-loadable step-span trace, and per-lane goodput
+accounting — token streams and compile counts are identical with
+telemetry on or off (CLI: ``--metrics-out`` / ``--trace-out``).
 """
 from repro.serve.engine import (
     ServeConfig, init_cache, prefill, prefill_chunk, decode_step,
@@ -54,3 +62,6 @@ from repro.serve.router import (LaneRouter, LaneSpec, LaneLoad,
                                 SLO_CLASSES, SLO_LATENCY, SLO_BALANCED,
                                 SLO_THROUGHPUT)
 from repro.serve.runtime import ServeRuntime
+from repro.serve.telemetry import (Telemetry, MetricsRegistry,
+                                   StreamingHistogram, StepTracer,
+                                   NULL_TELEMETRY)

@@ -17,14 +17,33 @@ import jax.numpy as jnp
 
 @dataclass
 class Request:
+    """One generation request plus its wall-clock lifecycle stamps.
+
+    Lifecycle stamps (all ``time.time()``; DESIGN.md §observability):
+
+    * ``t_submit`` — entered the scheduler queue
+      (``ContinuousScheduler.submit``; preserved across preemption /
+      admission rollback, so waits accumulate from the FIRST submit).
+    * ``t_admit``  — placed into a slot grid (stamped at every
+      (re-)admission; queue-wait = ``t_admit - t_submit``).
+    * ``t_first``  — first generated token became available ON THE HOST:
+      stamped by the scheduler's ``record_tokens`` /
+      ``record_row_tokens`` with one shared per-step timestamp taken
+      after the runtime's existing device->host read-back — never at
+      plan/schedule time, so TTFT (``t_first - t_submit``) measures the
+      same thing in chunked, blocking and ring arms.
+    * ``t_done``   — retirement (last token recorded); TPOT =
+      ``(t_done - t_first) / (len(output) - 1)``.
+    """
     uid: int
     prompt: object                  # token array / (tokens, extra)
     max_new: int = 16
     done: bool = False
     output: list = field(default_factory=list)
     sampling: object = None         # serve.sampling.SamplingParams | None
-    t_submit: float = None          # wall-clock request lifecycle stamps
-    t_first: float = None           # (scheduler-set; TTFT/TPOT metrics)
+    t_submit: float = None          # lifecycle stamps: see class docstring
+    t_admit: float = None
+    t_first: float = None
     t_done: float = None
     # width-lane serving (serve.router; DESIGN.md §width lanes): the
     # declared SLO class drives lane choice, and the router stamps the

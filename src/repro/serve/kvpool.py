@@ -131,6 +131,17 @@ class KVPool:
         """Fraction of allocatable pool slots holding live tokens."""
         return self.used_tokens() / ((self.num_blocks - 1) * self.block_size)
 
+    def occupancy_stats(self) -> list:
+        """Per-shard occupancy snapshot — one entry for this unsharded
+        pool, matching ``ShardedKVPool.occupancy_stats``: live/free/
+        allocatable blocks, the quota soft cap, and the occupied
+        fraction of allocatable blocks.  Telemetry publishes these as
+        the ``pool_*`` gauges each engine step (DESIGN.md
+        §observability)."""
+        return [{"used": self.n_used_blocks, "free": self.n_free_blocks,
+                 "headroom": self.headroom, "quota": self.quota,
+                 "occupancy": self.n_used_blocks / (self.num_blocks - 1)}]
+
     # -- alloc / append / free --------------------------------------------
     def _take(self, n: int):
         if n > len(self._free):
@@ -346,6 +357,12 @@ class ShardedKVPool:
     def utilization(self) -> float:
         return self.used_tokens() / (
             (self.num_blocks - self.n_shards) * self.block_size)
+
+    def occupancy_stats(self) -> list:
+        """Occupancy snapshot per data shard (see
+        ``KVPool.occupancy_stats``) — index s describes shard s's own
+        segment, so the pool gauges stay shard-keyed under a mesh."""
+        return [st for p in self._shards for st in p.occupancy_stats()]
 
     # -- alloc / append / free (global ids) -------------------------------
     def allocate(self, cid, num_tokens: int = 0):

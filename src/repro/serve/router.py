@@ -47,11 +47,35 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.serve.kvpool import blocks_for
+from repro.serve.telemetry import MetricsRegistry, NULL_TELEMETRY
 
 SLO_LATENCY = "latency"
 SLO_BALANCED = "balanced"
 SLO_THROUGHPUT = "throughput"
 SLO_CLASSES = (SLO_LATENCY, SLO_BALANCED, SLO_THROUGHPUT)
+
+# Default per-class TTFT targets (seconds) for goodput accounting —
+# goodput = TTFT-SLO attainment × tokens/s (arXiv:2504.14489; MuxServe,
+# arXiv:2404.02015).  Deployments override via ``LaneRouter(ttft_slo=...)``.
+DEFAULT_TTFT_SLO = {SLO_LATENCY: 0.1, SLO_BALANCED: 0.5,
+                    SLO_THROUGHPUT: 2.0}
+
+
+def ttft_attainment(completed, targets=None):
+    """Fraction of ``completed`` requests whose TTFT met their SLO
+    class's target (requests without both stamps are skipped; missing /
+    None SLO counts as balanced).  Returns (attainment, n_measured);
+    attainment is 1.0 when nothing was measurable (vacuous)."""
+    targets = targets if targets is not None else DEFAULT_TTFT_SLO
+    met = n = 0
+    for r in completed:
+        if r.t_first is None or r.t_submit is None:
+            continue
+        n += 1
+        limit = targets.get(getattr(r, "slo", None) or SLO_BALANCED)
+        if limit is None or r.t_first - r.t_submit <= limit:
+            met += 1
+    return (met / n if n else 1.0), n
 
 
 @dataclass(frozen=True)
@@ -105,11 +129,17 @@ class LaneRouter:
     threshold beyond which the lane counts as saturated (default: the
     lane's slot count — one full grid waiting).  budget: optional global
     block budget partitioned into per-lane quotas (proportional to each
-    lane's device ceiling); enables ``rebalance``.
+    lane's device ceiling); enables ``rebalance``.  telemetry: serve-wide
+    ``serve.telemetry.Telemetry`` handle — the router's counters live in
+    its ``MetricsRegistry`` (a private registry when no telemetry is
+    passed) and rebalance/spill decisions emit trace instants.
+    ttft_slo: per-SLO-class TTFT targets (seconds) for goodput
+    accounting (``lane_stats``); defaults to ``DEFAULT_TTFT_SLO``.
     """
 
     def __init__(self, runtimes, *, spill_queue: int | None = None,
-                 budget: int | None = None):
+                 budget: int | None = None, telemetry=None,
+                 ttft_slo: dict | None = None):
         if not runtimes:
             raise ValueError("need at least one lane")
         widths = [rt.n_mux for rt in runtimes]
@@ -118,15 +148,33 @@ class LaneRouter:
         self.runtimes = list(runtimes)
         self.spill_queue = spill_queue
         self.budget = budget
+        self.tele = telemetry if telemetry is not None else NULL_TELEMETRY
+        # routing counters live on a MetricsRegistry (shared with the
+        # serve-wide telemetry when enabled, private otherwise); the
+        # ``counters`` property rebuilds the legacy dict view from it
+        self.registry = (self.tele.registry if self.tele.enabled
+                         else MetricsRegistry())
+        self.ttft_slo = dict(ttft_slo if ttft_slo is not None
+                             else DEFAULT_TTFT_SLO)
         # lane indices sorted narrow -> wide; SLO preference orders are
         # slices/reversals of this
         self._by_width = sorted(range(len(runtimes)),
                                 key=lambda i: runtimes[i].n_mux)
-        self.counters = {"routed": dict.fromkeys(SLO_CLASSES, 0),
-                         "demotions": 0, "promotions": 0,
-                         "rebalanced_blocks": 0}
         if budget is not None:
             self._init_quotas(budget)
+
+    @property
+    def counters(self) -> dict:
+        """Backward-compatible view of the routing counters (they live
+        on ``self.registry`` since the telemetry layer landed): the
+        historical nested-dict shape consumed by ``stats['routing']``
+        and the churn benchmark JSON."""
+        reg = self.registry
+        return {"routed": {slo: reg.value("router_routed", slo=slo)
+                           for slo in SLO_CLASSES},
+                "demotions": reg.value("router_demotions"),
+                "promotions": reg.value("router_promotions"),
+                "rebalanced_blocks": reg.value("router_rebalanced_blocks")}
 
     # -- pool partitioning -------------------------------------------------
     @staticmethod
@@ -208,7 +256,9 @@ class LaneRouter:
                 moved += d
                 if demand[i] == 0:
                     break
-        self.counters["rebalanced_blocks"] += moved
+        if moved:
+            self.registry.inc("router_rebalanced_blocks", moved)
+            self.tele.instant("rebalance", blocks=moved)
         return moved
 
     # -- routing policy ----------------------------------------------------
@@ -261,14 +311,48 @@ class LaneRouter:
                       None)
         if chosen is None:        # every eligible lane saturated: least
             chosen = min(order, key=lambda i: loads[i].pressure)
-        self.counters["routed"][slo] += 1
+        self.registry.inc("router_routed", slo=slo)
+        self.registry.inc("router_lane_routed",
+                          lane=self.runtimes[chosen].lane)
         if chosen != order[0]:
             w0 = self.runtimes[order[0]].n_mux
             wc = self.runtimes[chosen].n_mux
-            self.counters["demotions" if wc > w0 else "promotions"] += 1
+            kind = "demotions" if wc > w0 else "promotions"
+            self.registry.inc(f"router_{kind}")
+            self.tele.instant("spill", lane=self.runtimes[chosen].lane,
+                              kind=kind[:-1], slo=slo,
+                              uid=getattr(request, "uid", None))
         request.slo = slo
         request.lane = self.runtimes[chosen].lane
         return chosen
 
     def loads(self) -> list:
         return [rt.load() for rt in self.runtimes]
+
+    # -- goodput accounting ------------------------------------------------
+    def lane_stats(self, wall: float | None = None) -> list:
+        """Per-lane goodput accounting: TTFT-SLO attainment × tokens/s —
+        the signal goodput-driven scheduling routes on
+        (arXiv:2504.14489).  ``wall``: elapsed serving wall time in
+        seconds (tokens/s and goodput are None without it).  Reads each
+        runtime's completed requests (lanes without stats — unit-test
+        fakes — report zero traffic).  Also publishes the per-lane
+        ``lane_goodput_tok_s`` / ``lane_ttft_slo_attainment`` gauges."""
+        out = []
+        for rt in self.runtimes:
+            completed = getattr(rt, "stats", {}).get("completed", ())
+            tokens = sum(len(r.output) for r in completed)
+            attain, measured = ttft_attainment(completed, self.ttft_slo)
+            tok_s = tokens / wall if wall else None
+            goodput = attain * tok_s if tok_s is not None else None
+            out.append({"lane": rt.lane, "n_mux": rt.n_mux,
+                        "completed": len(completed), "tokens": tokens,
+                        "ttft_measured": measured,
+                        "slo_attainment": attain, "tok_s": tok_s,
+                        "goodput_tok_s": goodput})
+            self.registry.gauge("lane_ttft_slo_attainment", attain,
+                                lane=rt.lane)
+            if goodput is not None:
+                self.registry.gauge("lane_goodput_tok_s", goodput,
+                                    lane=rt.lane)
+        return out

@@ -57,6 +57,8 @@ device, and sampling runs on the devices owning each row — only the
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 import jax
@@ -68,6 +70,7 @@ from repro.serve.engine import (ServeConfig, init_cache, make_pool, prefill,
                                 set_block_tables, reset_blocks)
 from repro.serve.kvpool import PoolExhausted
 from repro.serve.scheduler import ContinuousScheduler
+from repro.serve.telemetry import NULL_TELEMETRY
 
 MIN_BUCKET = 4
 
@@ -99,12 +102,21 @@ class ServeRuntime:
     id under width-lane serving (DESIGN.md §width lanes) — tags the
     scheduler's plans and this runtime's stats/load snapshots; each lane
     owns its own runtime, pool partition and jitted step set.
+    telemetry: serve-wide ``serve.telemetry.Telemetry`` handle (None =
+    disabled).  Instrumentation is host-side only, at the step
+    boundaries that already exist — spans bracket the jitted calls the
+    runtime was dispatching anyway, TTFT stamps ride the existing
+    device->host token read-back — so telemetry adds no host syncs and
+    no recompiles, and token streams are identical with it on or off
+    (the no-host-sync invariant, DESIGN.md §observability; enforced by
+    ``tests/test_serve_fuzz.py``).
     """
 
     def __init__(self, params, sc: ServeConfig, backbone_rows: int, *,
                  chunk: int | None = 32, pad_id: int = 0,
                  default_sampling=None, on_prefill=None,
-                 use_kernels: bool = False, mesh=None, lane: int = 0):
+                 use_kernels: bool = False, mesh=None, lane: int = 0,
+                 telemetry=None):
         if sc.cache_layout != "paged":
             raise ValueError("ServeRuntime requires cache_layout='paged'")
         if sc.kind != "lm":
@@ -145,12 +157,17 @@ class ServeRuntime:
         self.use_kernels = use_kernels
         self.mesh = mesh
         self.lane = lane
+        self.tele = telemetry if telemetry is not None else NULL_TELEMETRY
+        if self.tele.enabled:
+            self.tele.tracer.process_name(
+                lane, f"lane {lane} (N={self.n_mux})")
 
         self.sched = ContinuousScheduler(n_mux=self.n_mux,
                                          backbone_batch=backbone_rows,
                                          max_len=sc.capacity,
                                          n_shards=sc.n_shards,
-                                         lane=lane)
+                                         lane=lane,
+                                         telemetry=self.tele)
         self.pool = make_pool(sc, self.nb)
         self.cache = init_cache(sc, self.nb)
         # per-row trash-block routing (each shard's invalid writes stay
@@ -206,6 +223,13 @@ class ServeRuntime:
     # -- jitted step bodies (traced once per shape signature) --------------
     def _traced(self, key: str):
         self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+        # runs at TRACE time (host-side, once per program), so a compile
+        # event in the timeline marks exactly where a step first traced —
+        # and a second 'compile' instant for the same program is a
+        # compile-once violation visible in the trace itself
+        if self.tele.enabled:
+            self.tele.inc("compiles", lane=self.lane, program=key)
+            self.tele.instant("compile", lane=self.lane, program=key)
 
     def _step_ctx(self, trash):
         """Layer-context extras shared by the jitted steps: the mesh (for
@@ -342,16 +366,33 @@ class ServeRuntime:
         a ``shard`` scope where relevant; the runtime never executes a
         plan from another lane's scheduler (lane isolation is
         structural — one scheduler, pool and step set per lane)."""
-        self._exec_admissions()
-        for plan in self.sched.plan_chunks(self.chunk):
-            self._exec_chunk(plan)
-        self._exec_frees()                 # e.g. max_new=1 done at prefill
-        dp = self.sched.plan_decode()
-        rows = [j for j in dp.rows if j in self.row_len]
-        if rows:
-            self._exec_decode(rows)
-            self._exec_frees()
+        with self.tele.span("engine_step", lane=self.lane,
+                            metric="step_latency_s"):
+            self._exec_admissions()
+            for plan in self.sched.plan_chunks(self.chunk):
+                self._exec_chunk(plan)
+            self._exec_frees()             # e.g. max_new=1 done at prefill
+            dp = self.sched.plan_decode()
+            rows = [j for j in dp.rows if j in self.row_len]
+            if rows:
+                self._exec_decode(rows)
+                self._exec_frees()
         self.engine_steps += 1
+        if self.tele.enabled:
+            self._record_pool_gauges()
+
+    def _record_pool_gauges(self):
+        """Publish the pool occupancy / quota-headroom gauges, keyed
+        (lane, shard).  Host-side allocator state only — never touches
+        device arrays."""
+        for s, st in enumerate(self.pool.occupancy_stats()):
+            self.tele.gauge("pool_occupancy", st["occupancy"],
+                            lane=self.lane, shard=s)
+            self.tele.gauge("pool_headroom_blocks", st["headroom"],
+                            lane=self.lane, shard=s)
+            if st["quota"] is not None:
+                self.tele.gauge("pool_quota_blocks", st["quota"],
+                                lane=self.lane, shard=s)
 
     def _commit_cache(self):
         """Re-assert the pinned NamedShardings after a host-side cache
@@ -380,7 +421,11 @@ class ServeRuntime:
         while plans:
             retry = False
             for plan in plans:
-                if self._exec_admit(plan):
+                with self.tele.span("admit", lane=self.lane,
+                                    shard=plan.shard, row=plan.row,
+                                    tokens=plan.total):
+                    ok = self._exec_admit(plan)
+                if ok:
                     admitted = True
                 else:
                     failed.add(plan.shard)
@@ -410,6 +455,12 @@ class ServeRuntime:
             # is shard-local: only the plan's own shard can ever free
             # the blocks this group is waiting for.
             self.sched.cancel_admit(plan)
+            if self.tele.enabled:
+                self.tele.inc("admit_rollbacks", lane=self.lane,
+                              shard=plan.shard)
+                self.tele.instant("cancel", lane=self.lane,
+                                  shard=plan.shard, row=plan.row,
+                                  tokens=plan.total)
             if self._shard_used_blocks(plan.row) == 0:
                 raise PoolExhausted(
                     f"request group of {plan.total} tokens cannot fit "
@@ -430,6 +481,15 @@ class ServeRuntime:
         return self.buckets[-1]
 
     def _exec_chunk(self, plan):
+        j = plan.row
+        with self.tele.span("prefill_chunk", lane=self.lane,
+                            shard=self.sched.shard_of(j),
+                            metric="prefill_chunk_s", row=j,
+                            start=plan.start, length=plan.length,
+                            last=plan.last):
+            self._exec_chunk_inner(plan)
+
+    def _exec_chunk_inner(self, plan):
         j = plan.row
         toks = self.row_tokens[j][:, plan.start:plan.start + plan.length]
         arr, steps = self._sampling_row(j)
@@ -463,8 +523,11 @@ class ServeRuntime:
         done = self.sched.chunk_done(j, plan.length)
         if plan.last:
             assert done
+            # the existing device->host read-back of the row's first
+            # generated tokens; the timestamp taken right after it is
+            # the uniform TTFT stamp for the whole group (no NEW sync)
             first = np.asarray(out)
-            self.sched.record_row_tokens(j, first)
+            self.sched.record_row_tokens(j, first, now=time.time())
             self.next_tok[:, j] = first
 
     def _clear_dead_slots(self):
@@ -510,6 +573,12 @@ class ServeRuntime:
             self.pool.free(j)
             del self.row_len[j]
             del self.row_tokens[j]
+            if self.tele.enabled:
+                shard = (self.pool.shard_of(j)
+                         if hasattr(self.pool, "shard_of") else 0)
+                self.tele.inc("preempts", lane=self.lane, shard=shard)
+                self.tele.instant("preempt", lane=self.lane, shard=shard,
+                                  row=j)
         if fresh:
             self.cache = reset_blocks(self.cache, fresh)
         if fresh or preempt:
@@ -522,12 +591,19 @@ class ServeRuntime:
         self._clear_dead_slots()
         toks_in = self.next_tok.reshape(-1)[:, None]
         temps, top_k, top_p, seeds, steps = self._sampling_grid()
-        out, self.cache = self._decode_jit(
-            self.params, self.cache, toks_in, pos_vec, temps, top_k,
-            top_p, seeds, steps)
-        grid = np.asarray(out).reshape(self.n_mux, self.nrows)
+        with self.tele.span("decode", lane=self.lane,
+                            metric="decode_step_s", rows=len(rows)):
+            out, self.cache = self._decode_jit(
+                self.params, self.cache, toks_in, pos_vec, temps, top_k,
+                top_p, seeds, steps)
+            # the one existing device->host gather per decode step; the
+            # span closes after it, so decode_step_s covers dispatch +
+            # this read-back (no NEW sync), and the timestamp below is
+            # the step's uniform token-arrival stamp for every stream
+            grid = np.asarray(out).reshape(self.n_mux, self.nrows)
+        now = time.time()
         for j in rows:
-            self.sched.record_row_tokens(j, grid[:, j])
+            self.sched.record_row_tokens(j, grid[:, j], now=now)
             self.row_len[j] += 1
         self.next_tok = grid.copy()
         self.stats["decode_steps"] += 1
@@ -540,3 +616,7 @@ class ServeRuntime:
                 self.pool.free(plan.row)
                 del self.row_len[plan.row]
                 del self.row_tokens[plan.row]
+                if self.tele.enabled:
+                    self.tele.instant("free", lane=self.lane,
+                                      shard=self.sched.shard_of(plan.row),
+                                      row=plan.row)

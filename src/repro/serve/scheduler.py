@@ -42,6 +42,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.serve.telemetry import NULL_TELEMETRY
+
 
 @dataclass
 class StreamSlot:
@@ -139,6 +141,11 @@ class ContinuousScheduler:
     # preempt back-channels only ever touch this scheduler's own slots
     # and queue — lane isolation is structural, not policed.
     lane: int = 0
+    # serve-wide telemetry handle (serve.telemetry.Telemetry); None means
+    # disabled.  The scheduler observes queue-wait at admission and
+    # TTFT / TPOT at retirement — all host-side, at the points where the
+    # runtime already handed it host tokens (no new device syncs).
+    telemetry: object = None
     queue: collections.deque = field(default_factory=collections.deque)
     slots: list = field(init=False)
     steps: int = field(default=0, init=False)
@@ -151,6 +158,8 @@ class ContinuousScheduler:
             raise ValueError(
                 f"backbone_batch {self.backbone_batch} not divisible by "
                 f"n_shards {self.n_shards}")
+        if self.telemetry is None:
+            self.telemetry = NULL_TELEMETRY
         self.slots = [[StreamSlot() for _ in range(self.n_mux)]
                       for _ in range(self.backbone_batch)]
 
@@ -184,6 +193,17 @@ class ContinuousScheduler:
                    if s.request is not None)
 
     # -- scheduling step ----------------------------------------------------
+    def _stamp_admit(self, r):
+        """Stamp ``t_admit`` (lifecycle stamps: serve.batcher.Request)
+        and observe queue-wait.  A re-admitted request (preempt /
+        rollback) is stamped again — queue-wait measures submit -> most
+        recent placement, so requeue time shows up as repeat
+        observations with growing waits."""
+        r.t_admit = now = time.time()
+        tele = self.telemetry
+        if tele.enabled and r.t_submit is not None:
+            tele.observe("queue_wait_s", now - r.t_submit, lane=self.lane)
+
     def admit(self):
         """Place queued requests into free slots.  Returns the list of
         backbone rows whose composition changed (need re-prefill)."""
@@ -194,6 +214,7 @@ class ContinuousScheduler:
             r = self.queue.popleft()
             self.slots[j][i] = StreamSlot(
                 request=r, pos=len(r.prompt), prompt_len=len(r.prompt))
+            self._stamp_admit(r)
             dirty_rows.add(j)
         return sorted(dirty_rows)
 
@@ -222,6 +243,7 @@ class ContinuousScheduler:
                 r = self.queue.popleft()
                 self.slots[j][i] = StreamSlot(
                     request=r, pos=len(r.prompt), prompt_len=len(r.prompt))
+                self._stamp_admit(r)
                 placed.append((i, r))
             if placed:
                 # the group is prefilled from row_prompts (prompt plus any
@@ -336,41 +358,69 @@ class ContinuousScheduler:
             arr[i, :len(t)] = t
         return arr
 
-    def _record_slot(self, j: int, i: int, token) -> int:
+    def _record_slot(self, j: int, i: int, token, now: float) -> int:
+        """Record one host-available token for slot (i, j), stamped with
+        the caller-supplied ``now`` — one uniform timestamp per recording
+        call, taken AFTER the device step's tokens reached the host, so
+        every stream of a step gets the same TTFT/TPOT reference point
+        regardless of grid iteration order or prefill mode (lifecycle
+        stamps: serve.batcher.Request)."""
         s = self.slots[j][i]
         if s.request is None:
             return 0
         s.request.output.append(int(token))
-        if getattr(s.request, "t_first", None) is None:
-            s.request.t_first = time.time()
+        r = s.request
+        tele = self.telemetry
+        if r.t_first is None:
+            r.t_first = now
+            if tele.enabled and r.t_submit is not None:
+                tele.observe("ttft_s", now - r.t_submit, lane=self.lane)
         s.pos += 1
-        done = (len(s.request.output) >= s.request.max_new or
-                s.pos >= self.max_len)
+        done = (len(r.output) >= r.max_new or s.pos >= self.max_len)
         if done:
-            s.request.done = True
-            s.request.t_done = time.time()
-            self.completed.append(s.request)
+            r.done = True
+            r.t_done = now
+            self.completed.append(r)
             self.slots[j][i] = StreamSlot()
+            if tele.enabled:
+                tele.inc("requests_completed", lane=self.lane)
+                if len(r.output) > 1 and now > r.t_first:
+                    tele.observe("tpot_s",
+                                 (now - r.t_first) / (len(r.output) - 1),
+                                 lane=self.lane)
         return int(done)
 
-    def record_tokens(self, tokens):
+    def record_tokens(self, tokens, now: float | None = None):
         """tokens: (N_mux * B,) next token per stream (mux-major order:
-        stream i of row j at index i * B + j).  Retires finished
-        requests; returns number retired."""
+        stream i of row j at index i * B + j), already on the host.
+        ``now``: the step's shared timestamp (default: taken once here).
+        Retires finished requests; returns number retired."""
+        if now is None:
+            now = time.time()
         retired = 0
         for i in range(self.n_mux):
             for j in range(self.backbone_batch):
                 retired += self._record_slot(
-                    j, i, tokens[i * self.backbone_batch + j])
+                    j, i, tokens[i * self.backbone_batch + j], now)
+        if self.telemetry.enabled:
+            self.telemetry.inc("tokens_generated", self.n_active + retired,
+                               lane=self.lane)
         self.steps += 1
         return retired
 
-    def record_row_tokens(self, j: int, tokens):
+    def record_row_tokens(self, j: int, tokens, now: float | None = None):
         """tokens: (N_mux,) next token per stream of row j (e.g. the
-        first generated tokens produced by a row's prefill).  Retires
-        finished requests; returns number retired."""
-        return sum(self._record_slot(j, i, tokens[i])
-                   for i in range(self.n_mux))
+        first generated tokens produced by a row's prefill), already on
+        the host.  ``now``: the step's shared timestamp (default: taken
+        once here).  Retires finished requests; returns number retired."""
+        if now is None:
+            now = time.time()
+        before = sum(1 for s in self.slots[j] if s.request is not None)
+        retired = sum(self._record_slot(j, i, tokens[i], now)
+                      for i in range(self.n_mux))
+        if self.telemetry.enabled:
+            self.telemetry.inc("tokens_generated", before, lane=self.lane)
+        return retired
 
     def utilization(self) -> float:
         """Occupied fraction of the N_mux × backbone_batch slot grid in

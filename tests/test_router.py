@@ -274,3 +274,83 @@ def test_lane_backpressure_stays_lane_local(lane_model):
                if r.slo == "latency")
     assert all(r.lane == 1 for r in stats["completed"]
                if r.slo == "throughput")
+
+
+# ---------------------------------------------- goodput + telemetry view
+
+from repro.serve.router import (DEFAULT_TTFT_SLO, SLO_CLASSES,
+                                ttft_attainment)
+from repro.serve.telemetry import Telemetry
+
+
+def _done_req(uid, slo, ttft, tokens=4):
+    r = req(uid, slo=slo)
+    r.t_submit = 100.0
+    r.t_first = 100.0 + ttft
+    r.output = list(range(tokens))
+    return r
+
+
+def test_ttft_attainment_helper():
+    done = [_done_req(0, SLO_LATENCY, 0.05),      # met (0.1 target)
+            _done_req(1, SLO_LATENCY, 0.50),      # missed
+            _done_req(2, SLO_THROUGHPUT, 1.00),   # met (2.0 target)
+            _done_req(3, None, 0.40)]             # None -> balanced, met
+    attain, n = ttft_attainment(done)
+    assert n == 4 and attain == pytest.approx(3 / 4)
+    # unstamped requests are skipped, not counted as misses
+    pending = req(9, slo=SLO_LATENCY)
+    attain, n = ttft_attainment(done + [pending])
+    assert n == 4 and attain == pytest.approx(3 / 4)
+    # vacuous attainment when nothing was measurable
+    assert ttft_attainment([pending]) == (1.0, 0)
+    # custom targets override the defaults
+    attain, _ = ttft_attainment(done, {s: 10.0 for s in SLO_CLASSES})
+    assert attain == 1.0
+
+
+def test_counters_are_registry_view():
+    tele = Telemetry()
+    router, _ = mk_router((1, 4), telemetry=tele)
+    assert router.registry is tele.registry       # shared when enabled
+    router.route(req(0, slo=SLO_LATENCY))
+    assert tele.registry.value("router_routed", slo="latency") == 1
+    assert tele.registry.value("router_lane_routed", lane=0) == 1
+    # the legacy dict view rebuilds from the registry on every read
+    assert router.counters["routed"]["latency"] == 1
+    tele.registry.inc("router_demotions")
+    assert router.counters["demotions"] == 1
+    # without telemetry the router still keeps a private registry
+    router2, _ = mk_router((1, 4))
+    router2.route(req(1, slo=SLO_BALANCED))
+    assert router2.counters["routed"] == {"latency": 0, "balanced": 1,
+                                          "throughput": 0}
+
+
+def test_lane_stats_goodput_accounting():
+    router, lanes = mk_router((1, 4))
+    # FakeLane has no .stats: zero traffic, vacuous attainment, no rates
+    for ls in router.lane_stats():
+        assert ls["completed"] == 0 and ls["tokens"] == 0
+        assert ls["slo_attainment"] == 1.0
+        assert ls["tok_s"] is None and ls["goodput_tok_s"] is None
+    # attach served traffic: goodput = attainment x tok_s per lane
+    lanes[0].stats = {"completed": [_done_req(0, SLO_LATENCY, 0.05),
+                                    _done_req(1, SLO_LATENCY, 0.50)]}
+    lanes[1].stats = {"completed": [_done_req(2, SLO_THROUGHPUT, 1.0,
+                                              tokens=8)]}
+    stats = router.lane_stats(wall=2.0)
+    assert stats[0]["slo_attainment"] == pytest.approx(0.5)
+    assert stats[0]["tok_s"] == pytest.approx(8 / 2.0)
+    assert stats[0]["goodput_tok_s"] == pytest.approx(0.5 * 4.0)
+    assert stats[1]["slo_attainment"] == 1.0
+    assert stats[1]["goodput_tok_s"] == pytest.approx(4.0)
+    # published as per-lane gauges on the router's registry
+    assert (router.registry.value("lane_ttft_slo_attainment", lane=0)
+            == pytest.approx(0.5))
+    assert (router.registry.value("lane_goodput_tok_s", lane=1)
+            == pytest.approx(4.0))
+    # custom targets flow through
+    loose, _ = mk_router((1,), ttft_slo={s: 10.0 for s in SLO_CLASSES})
+    loose.runtimes[0].stats = lanes[0].stats
+    assert loose.lane_stats(wall=2.0)[0]["slo_attainment"] == 1.0

@@ -190,3 +190,42 @@ def test_kernel_decode_path_matches_naive():
                                cache=pre["cache"], use_kernels=True, **kw)
     np.testing.assert_allclose(np.asarray(kern["logits"]),
                                np.asarray(naive["logits"]), atol=1e-4)
+
+
+def test_lifecycle_stamps_and_queue_wait_metric():
+    """Lifecycle stamps (serve.batcher.Request): submit() stamps
+    t_submit once, every (re-)admission stamps t_admit and observes
+    queue-wait, retirement stamps t_done — and a telemetry-less
+    scheduler records nothing but still stamps."""
+    from repro.serve.telemetry import Telemetry
+
+    tele = Telemetry()
+    s = ContinuousScheduler(n_mux=2, backbone_batch=1, max_len=64,
+                            telemetry=tele)
+    r = mk_req(0, max_new=2)
+    s.submit(r)
+    assert r.t_submit is not None and r.t_admit is None
+    s.admit()
+    assert r.t_admit is not None and r.t_admit >= r.t_submit
+    h = tele.registry.hist("queue_wait_s", lane=0)
+    assert h is not None and h.count == 1
+    # retirement: t_first/t_done stamped from the recording timestamp,
+    # TTFT observed once, completion counted
+    s.record_tokens(np.full(2, 9), now=r.t_admit + 0.5)
+    s.record_tokens(np.full(2, 9), now=r.t_admit + 0.6)
+    assert r.done and r.t_first == r.t_admit + 0.5
+    assert r.t_done == r.t_admit + 0.6
+    assert tele.registry.hist("ttft_s", lane=0).count == 1
+    assert tele.registry.value("requests_completed", lane=0) == 1
+    assert tele.registry.value("tokens_generated", lane=0) == 2
+    # resubmission preserves t_submit (queue-wait keeps growing)
+    t_orig = r.t_submit
+    s.submit(r)
+    assert r.t_submit == t_orig
+    # no telemetry: stamps still land, nothing recorded anywhere
+    s2 = ContinuousScheduler(n_mux=2, backbone_batch=1, max_len=64)
+    r2 = mk_req(1)
+    s2.submit(r2)
+    s2.admit()
+    assert r2.t_admit is not None
+    assert s2.telemetry.registry.snapshot()["histograms"] == []

@@ -14,7 +14,11 @@ prompt length, generation budget, pool pressure) are served through:
                       (``run_continuous(lanes=...)``): each lane's
                       routed sub-schedule must be token-identical to a
                       fixed-width run at that lane's N, with compile
-                      counts of 1 decode + one per bucket per width.
+                      counts of 1 decode + one per bucket per width;
+  * telemetry       — paged-chunked with a live ``serve.telemetry``
+                      session: token- and compile-count-identical to
+                      the uninstrumented run (observability must add
+                      no host syncs and no jit inputs).
 
 All paged arms must emit token-identical greedy streams per request, and
 each stream must equal its solo ``greedy_generate`` output.  The ring
@@ -43,6 +47,7 @@ from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig, greedy_generate
 from repro.serve.router import SLO_CLASSES
+from repro.serve.telemetry import Telemetry
 from repro.launch.mesh import make_serve_mesh
 from repro.launch.serve import run_continuous
 
@@ -172,6 +177,44 @@ def _fuzz_pressure_once(cfg, params, seed):
                                       np.asarray(want))
 
 
+def _fuzz_telemetry_once(cfg, params, seed):
+    """Telemetry-parity arm (DESIGN.md §observability): serving the same
+    schedule with a live ``Telemetry`` must be token-identical AND
+    compile-count-identical to the uninstrumented run — instrumentation
+    adds no host syncs, no jit inputs, no recompiles.  The instrumented
+    run's metrics must also agree with the runtime's own stats."""
+    arrivals = _schedule(cfg, seed)
+
+    def arm(telemetry=None):
+        stats = run_continuous(params, _paged_sc(cfg), ROWS,
+                               [(t, p.copy(), m) for t, p, m in arrivals],
+                               chunk=4, telemetry=telemetry)
+        tokens = {r.uid: (tuple(r.prompt), list(r.output))
+                  for r in stats["completed"]}
+        assert len(tokens) == len(arrivals)
+        return tokens, dict(stats["trace_counts"]), stats
+
+    base_tokens, base_traces, _ = arm()
+    tele = Telemetry(snapshot_every=2)
+    tokens, traces, stats = arm(tele)
+    assert tokens == base_tokens, "telemetry changed the token streams"
+    assert traces == base_traces, "telemetry changed the compile counts"
+    reg = tele.registry
+    generated = sum(len(out) for _, out in tokens.values())
+    assert reg.value("tokens_generated", lane=0) == generated
+    assert reg.value("requests_completed", lane=0) == len(arrivals)
+    assert (reg.hist("decode_step_s", lane=0, shard=0).count
+            == stats["decode_steps"])
+    assert reg.hist("ttft_s", lane=0).count == len(arrivals)
+    # lifecycle stamps stay ordered through churn/preemption
+    for r in stats["completed"]:
+        assert r.t_submit <= r.t_admit <= r.t_first <= r.t_done
+    # the periodic snapshots and exports stay schema-valid
+    assert tele.snapshots and all("step" in s for s in tele.snapshots)
+    phs = {e["ph"] for e in tele.tracer.chrome_trace()["traceEvents"]}
+    assert phs <= {"X", "i", "M"}
+
+
 LANE_WIDTHS = (1, 4, 8)
 
 
@@ -243,6 +286,12 @@ def test_fuzz_aligned_deterministic(model):
 def test_fuzz_pool_pressure_deterministic(model):
     cfg, params = model
     _fuzz_pressure_once(cfg, params, 3)
+
+
+@pytest.mark.parametrize("seed", [0, 4])
+def test_fuzz_telemetry_parity_deterministic(model, seed):
+    cfg, params = model
+    _fuzz_telemetry_once(cfg, params, seed)
 
 
 @pytest.mark.parametrize("seed", [0, 1])
