@@ -7,9 +7,10 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:                      ## tier-1: full test suite
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
-test-mesh:                 ## sharded serving + churn fuzz on 8 fake devices
+test-mesh:                 ## sharded serving + churn/fault fuzz on 8 fake devices
 	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q $(PYTEST_ARGS) \
-	    tests/test_mesh_serve.py tests/test_serve_fuzz.py
+	    tests/test_mesh_serve.py tests/test_serve_fuzz.py \
+	    tests/test_recovery.py
 
 bench-smoke:               ## ring-vs-paged churn benchmark, tiny CPU budget
 	$(PY) -m benchmarks.serve_churn --smoke

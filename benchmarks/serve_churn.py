@@ -18,6 +18,14 @@ the identical trace:
                          per lane width: the paper's Table-1-style
                          throughput-vs-width curve measured at serve
                          time rather than in fill-drain batches;
+  * ``recovery-kill``  — paged-chunked over two logical shard segments
+                         with shard 1 killed mid-trace (DESIGN.md
+                         §fault tolerance): same CSV columns (the
+                         prefill delta over ``paged-chunked`` is the
+                         replay re-prefill tax) plus JSON keys
+                         ``requests_replayed`` /
+                         ``replay_prefill_tokens`` /
+                         ``recovery_latency_s``;
   * ``lanes``          — width-lane serving (DESIGN.md §width lanes):
                          one runtime per width in ``--lanes``, requests
                          routed by SLO class + live lane load.
@@ -206,6 +214,30 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         row = _row(arm, width, stats, stats["completed"])
         results.append(row)
         _csv(row)
+
+    # recovery arm (DESIGN.md §fault tolerance): paged-chunked over two
+    # logical shard segments with shard 1 killed mid-trace — the extra
+    # prefill_backbone over paged-chunked is the replay re-prefill tax,
+    # and the JSON row carries the supervisor's recovery accounting
+    sc_kill = ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=mux_n),
+                          capacity=capacity, dtype=jnp.float32,
+                          cache_layout="paged", block_size=block_size,
+                          n_shards=2)
+    stats = run_continuous(params[mux_n], sc_kill, rows, trace_for(),
+                           chunk=chunk,
+                           events=[{"step": 10, "op": "kill_shard",
+                                    "shard": 1}])
+    assert len(stats["completed"]) == n_requests
+    rec = stats["recovery"]
+    row = _row("recovery-kill", mux_n, stats, stats["completed"])
+    row["shards_killed"] = rec["shards_killed"]
+    row["requests_replayed"] = rec["requests_replayed"]
+    row["replay_prefill_tokens"] = rec["replay_prefill_tokens"]
+    row["recovery_latency_s"] = rec["recovery_latency_s"]
+    row["recovery_latency_max_s"] = (max(rec["recovery_latency_s"])
+                                     if rec["recovery_latency_s"] else 0.0)
+    results.append(row)
+    _csv(row)
 
     if lanes:
         # telemetry rides the lanes arm only: the fixed arms above stay

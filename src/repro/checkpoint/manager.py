@@ -120,12 +120,23 @@ def restore_checkpoint(directory: str, target_tree, *, step: int | None = None,
 
 
 class AsyncCheckpointManager:
-    """Snapshot-to-host then background write; at most one in flight."""
+    """Snapshot-to-host then background write; at most one in flight.
+
+    ``restore``/``save``/``wait`` serialize on an internal lock, and a
+    failure in the background writer is NOT swallowed: it is re-raised
+    (chained) from the next ``wait()`` — without that, a later
+    ``restore`` would silently return an OLDER checkpoint than the
+    caller believes was committed.  On-disk commits are atomic
+    (tmp-dir + rename in ``save_checkpoint``), so a crash mid-save can
+    never leave a half-written step directory for restore to read.
+    """
 
     def __init__(self, directory: str, keep_k: int = 3):
         self.directory = directory
         self.keep_k = keep_k
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._error: BaseException | None = None
         self.last_committed: int | None = None
 
     def save(self, step: int, tree, metadata=None):
@@ -134,19 +145,30 @@ class AsyncCheckpointManager:
                                  tree)
 
         def work():
-            save_checkpoint(self.directory, step, host_tree,
-                            metadata=metadata, keep_k=self.keep_k)
-            self.last_committed = step
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                metadata=metadata, keep_k=self.keep_k)
+                self.last_committed = step
+            except BaseException as e:     # surfaced by the next wait()
+                self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        with self._lock:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
 
     def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        with self._lock:
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join()
+        if self._error is not None:
+            error, self._error = self._error, None
+            raise RuntimeError(
+                "background checkpoint save failed") from error
 
     def restore(self, target_tree, *, step=None, shardings=None):
+        # joining the in-flight save first makes restore read-your-own-
+        # writes: it can never race the writer or skip the newest step
         self.wait()
         return restore_checkpoint(self.directory, target_tree, step=step,
                                   shardings=shardings)

@@ -31,6 +31,19 @@ Two modes (DESIGN.md):
         --slo-mix latency=0.25,balanced=0.5,throughput=0.25 \
         --requests 12 --new-tokens 8
 
+  * fault injection / elastic resize (DESIGN.md §fault tolerance):
+    ``--shards 2 --kill-shard 4:1`` kills a data shard mid-run — its
+    streams replay from host token logs onto the survivors;
+    ``--drain-lane STEP:WIDTH`` / ``--add-lane STEP:WIDTH`` resize the
+    lane set under traffic without dropping a stream; ``--restart-step
+    STEP --ckpt-dir DIR`` snapshots the full serving state (KV pages +
+    block tables + scheduler) and hot-restores a rebuilt runtime — a
+    restart re-jits but never re-prefills live rows:
+
+    python -m repro.launch.serve --arch qwen2-1.5b --continuous \
+        --cache paged --shards 2 --kill-shard 6:1 --requests 8 \
+        --new-tokens 8
+
 Sampling (``serve.sampling``) is per-stream: ``--temperature``,
 ``--top-k`` and ``--top-p`` set every request's policy here, with the
 request uid as its seed; programmatic callers attach a ``SamplingParams``
@@ -52,10 +65,17 @@ from repro.models import TransformerLM, VLM, EncDecLM
 from repro.serve import (ServeConfig, init_cache, prefill, decode_step,
                          MuxBatcher, Request, sampling)
 from repro.serve.engine import lane_config
+from repro.serve.recovery import RecoverySupervisor
 from repro.serve.router import LaneRouter, LaneSpec, SLO_CLASSES
 from repro.serve.runtime import ServeRuntime
 from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.telemetry import NULL_TELEMETRY, Telemetry
+
+# stats keys merged across a --restart-step process swap: counters sum,
+# per-step traces concatenate (old process first)
+_COUNTER_KEYS = ("prefill_tokens", "prefill_compute_tokens",
+                 "prefill_events", "decode_steps")
+_TRACE_KEYS = ("prefill_log", "slot_util", "cache_util")
 
 
 def _sample_grid(sched, logits, default_sampling):
@@ -74,10 +94,48 @@ def _sample_grid(sched, logits, default_sampling):
         logits, plist, np.asarray(steps, np.int32)))
 
 
+def _lane_event(ev, router, sup, params_by_width, sc, backbone_rows,
+                *, step, chunk, prefill_mode, pad_id, default_sampling,
+                on_prefill, mesh, use_kernels, telemetry):
+    """Apply one failure/resize event to the lane set (DESIGN.md §fault
+    tolerance): ``kill_shard`` fences a data shard of one lane's grid,
+    ``drain_lane`` starts removing the lane at a width (streams finish
+    in place, queued work re-routes), ``add_lane`` brings up a fresh
+    runtime at a new width under traffic."""
+    op = ev["op"]
+    if op == "kill_shard":
+        idx = router._index_of(ev.get("lane", 0))
+        sup.kill_shard(router.runtimes[idx], ev["shard"])
+    elif op == "drain_lane":
+        width = ev["width"]
+        lane = next((rt.lane for rt in router.runtimes
+                     if rt.n_mux == width), None)
+        if lane is None:
+            raise ValueError(f"drain_lane: no lane at width {width}")
+        sup.drain_lane(router, lane, step=step)
+    elif op == "add_lane":
+        width = ev["width"]
+        if width not in params_by_width:
+            raise ValueError(f"add_lane: no params for width {width}")
+        lane_id = 1 + max(rt.lane for rt in
+                          router.runtimes + router.retired)
+        rt = ServeRuntime(
+            params_by_width[width], lane_config(sc, width),
+            ev.get("rows", backbone_rows),
+            chunk=None if prefill_mode == "blocking"
+            else ev.get("chunk", chunk),
+            pad_id=pad_id, default_sampling=default_sampling,
+            on_prefill=on_prefill, mesh=mesh, use_kernels=use_kernels,
+            lane=lane_id, telemetry=telemetry)
+        sup.add_lane(router, rt)
+    else:
+        raise ValueError(f"unknown serve event op {op!r}")
+
+
 def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
                arrivals, lanes, *, pad_id, on_prefill, chunk, prefill_mode,
                default_sampling, mesh, use_kernels, pool_budget,
-               spill_queue, telemetry):
+               spill_queue, telemetry, events=None, ckpt_dir=None):
     """Width-lane serve loop (DESIGN.md §width lanes): one ``ServeRuntime``
     per lane at that lane's mux width, ``LaneRouter`` admitting each
     arrival by SLO class + live lane load, all lanes stepping in lockstep
@@ -107,16 +165,23 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
             pad_id=pad_id, default_sampling=default_sampling,
             on_prefill=on_prefill, mesh=mesh, use_kernels=use_kernels,
             lane=idx, telemetry=telemetry))
-    # step order: narrow lanes first, so the latency lane's admissions
-    # land before wider lanes draw on freshly rebalanced quota
-    step_order = sorted(range(len(runtimes)),
-                        key=lambda i: runtimes[i].n_mux)
     router = LaneRouter(runtimes, budget=pool_budget,
                         spill_queue=spill_queue, telemetry=telemetry)
+    sup = RecoverySupervisor(ckpt_dir=ckpt_dir, telemetry=telemetry)
+    pending = collections.deque(
+        sorted(events or [], key=lambda e: e["step"]))
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid, step = 0, 0
     t0 = time.time()
-    while arrivals or any(rt.has_work() for rt in runtimes):
+    while (arrivals or pending
+           or any(rt.has_work() for rt in router.runtimes)):
+        while pending and pending[0]["step"] <= step:
+            _lane_event(pending.popleft(), router, sup, params_by_width,
+                        sc, backbone_rows, step=step, chunk=chunk,
+                        prefill_mode=prefill_mode, pad_id=pad_id,
+                        default_sampling=default_sampling,
+                        on_prefill=on_prefill, mesh=mesh,
+                        use_kernels=use_kernels, telemetry=telemetry)
         while arrivals and arrivals[0][0] <= step:
             a = arrivals.popleft()
             r = Request(uid=uid, prompt=list(a[1]), max_new=a[2],
@@ -125,38 +190,50 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
             uid += 1
             i = router.route(r)
             r.routed_step = step
-            runtimes[i].submit(r)
+            router.runtimes[i].submit(r)
         router.rebalance()
-        for i in step_order:
-            runtimes[i].step()
+        # step order: narrow lanes first, so the latency lane's
+        # admissions land before wider lanes draw on freshly rebalanced
+        # quota (recomputed per step — resize changes the lane set)
+        for rt in sorted(router.runtimes, key=lambda rt: rt.n_mux):
+            rt.step()
+        sup.note_step()
+        sup.pop_drained(router)
         step += 1
         telemetry.maybe_snapshot(step)
-    for rt in runtimes:
+    # retired (drained) lanes keep their runtimes so the compile-once
+    # and stats contracts still cover every lane that ever served;
+    # lane-id order == construction order when no resize happened
+    all_lanes = sorted(router.runtimes + router.retired,
+                       key=lambda rt: rt.lane)
+    for rt in all_lanes:
         rt.check_compile_once()
     wall = time.time() - t0
-    completed = [r for rt in runtimes for r in rt.stats["completed"]]
+    completed = [r for rt in all_lanes for r in rt.stats["completed"]]
     stats = {
         # per-lane goodput accounting (TTFT-SLO attainment × tok/s)
         "lane_stats": router.lane_stats(wall=wall),
-        "lanes": [rt.stats for rt in runtimes],
-        "widths": [s.n_mux for s in specs],
-        "pools": [rt.pool for rt in runtimes],
+        "lanes": [rt.stats for rt in all_lanes],
+        "widths": [rt.n_mux for rt in all_lanes],
+        "pools": [rt.pool for rt in all_lanes],
         "routing": router.counters,
         "completed": completed,
         "wall": wall,
         "generated_tokens": sum(len(r.output) for r in completed),
-        "prefill_mode": runtimes[0].stats["prefill_mode"],
+        "prefill_mode": all_lanes[0].stats["prefill_mode"],
+        "recovery": sup.stats,
         # aggregates over lanes (sums for counters, concatenation for
         # per-step traces) so single-width consumers keep working
         "prefill_tokens": sum(rt.stats["prefill_tokens"]
-                              for rt in runtimes),
+                              for rt in all_lanes),
         "prefill_compute_tokens": sum(rt.stats["prefill_compute_tokens"]
-                                      for rt in runtimes),
+                                      for rt in all_lanes),
         "prefill_events": sum(rt.stats["prefill_events"]
-                              for rt in runtimes),
-        "decode_steps": sum(rt.stats["decode_steps"] for rt in runtimes),
-        "slot_util": [u for rt in runtimes for u in rt.stats["slot_util"]],
-        "cache_util": [u for rt in runtimes
+                              for rt in all_lanes),
+        "decode_steps": sum(rt.stats["decode_steps"] for rt in all_lanes),
+        "slot_util": [u for rt in all_lanes
+                      for u in rt.stats["slot_util"]],
+        "cache_util": [u for rt in all_lanes
                        for u in rt.stats["cache_util"]],
     }
     return stats
@@ -166,12 +243,26 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                    *, pad_id: int = 0, on_prefill=None, chunk: int = 32,
                    prefill_mode: str = "chunked", default_sampling=None,
                    mesh=None, use_kernels: bool = False, lanes=None,
-                   pool_budget=None, spill_queue=None, telemetry=None):
+                   pool_budget=None, spill_queue=None, telemetry=None,
+                   events=None, ckpt_dir=None):
     """Continuous-batching serve loop for both cache layouts.
 
     arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams
     [, slo_class]]), sorted by step.  Each loop iteration admits what it
     can, then runs one decode step over the grid.  Returns a stats dict.
+
+    events: optional failure/resize schedule (DESIGN.md §fault
+    tolerance) — dicts of ``{"step": K, "op": ...}`` applied before
+    step K's admissions, orchestrated by a
+    ``serve.recovery.RecoverySupervisor`` whose accounting lands in
+    ``stats["recovery"]``.  Paged single-runtime ops: ``kill_shard``
+    (``shard``; needs ``sc.n_shards >= 2`` — lost streams replay onto
+    surviving shards) and ``restart`` (snapshot + rebuild + restore;
+    needs ``ckpt_dir``).  Lanes-mode ops: ``kill_shard`` (``shard``,
+    optional ``lane``), ``drain_lane`` (``width``) and ``add_lane``
+    (``width``, optional ``rows``/``chunk`` — ``params`` must carry
+    that width).  ckpt_dir: checkpoint directory for the hot KV-pool
+    snapshot/restore path.
 
     telemetry: optional ``serve.telemetry.Telemetry`` — streaming SLO
     metrics, the step-span trace and periodic registry snapshots
@@ -226,7 +317,10 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                           prefill_mode=prefill_mode,
                           default_sampling=default_sampling, mesh=mesh,
                           use_kernels=use_kernels, pool_budget=pool_budget,
-                          spill_queue=spill_queue, telemetry=telemetry)
+                          spill_queue=spill_queue, telemetry=telemetry,
+                          events=events, ckpt_dir=ckpt_dir)
+    if events and sc.cache_layout != "paged":
+        raise ValueError("failure/resize events require the paged layout")
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
     uid = 0
     t0 = time.time()
@@ -241,19 +335,48 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
             uid += 1
 
     if sc.cache_layout == "paged":
-        rt = ServeRuntime(params, sc, backbone_rows,
-                          chunk=None if prefill_mode == "blocking"
-                          else chunk,
-                          pad_id=pad_id, default_sampling=default_sampling,
-                          on_prefill=on_prefill, mesh=mesh,
-                          use_kernels=use_kernels, telemetry=telemetry)
+        def make_rt():
+            return ServeRuntime(
+                params, sc, backbone_rows,
+                chunk=None if prefill_mode == "blocking" else chunk,
+                pad_id=pad_id, default_sampling=default_sampling,
+                on_prefill=on_prefill, mesh=mesh,
+                use_kernels=use_kernels, telemetry=telemetry)
+
+        rt = make_rt()
+        sup = RecoverySupervisor(ckpt_dir=ckpt_dir, telemetry=telemetry)
+        pending = collections.deque(
+            sorted(events or [], key=lambda e: e["step"]))
         step = 0
-        while arrivals or rt.has_work():
+        while arrivals or pending or rt.has_work():
+            while pending and pending[0]["step"] <= step:
+                ev = pending.popleft()
+                if ev["op"] == "kill_shard":
+                    sup.kill_shard(rt, ev["shard"])
+                elif ev["op"] == "restart":
+                    # simulated process restart: hot snapshot, fresh
+                    # runtime (fresh jit caches — the restart pays a
+                    # re-trace, never a re-prefill), restore, and carry
+                    # the old process's delivered results + counters
+                    sup.snapshot(rt, step)
+                    old = rt
+                    rt = make_rt()
+                    sup.restore(rt)
+                    rt.sched.completed[:0] = old.sched.completed
+                    for k in _COUNTER_KEYS:
+                        rt.stats[k] += old.stats[k]
+                    for k in _TRACE_KEYS:
+                        rt.stats[k][:0] = old.stats[k]
+                else:
+                    raise ValueError(f"unknown serve event op "
+                                     f"{ev['op']!r}")
             _pop_arrivals(step, rt.submit)
             rt.step()
+            sup.note_step()
             step += 1
             telemetry.maybe_snapshot(step)
         stats = rt.stats
+        stats["recovery"] = sup.stats
         stats["wall"] = time.time() - t0
         stats["generated_tokens"] = sum(
             len(r.output) for r in stats["completed"])
@@ -471,6 +594,43 @@ def main(argv=None):
                          "decode kernel; interpret mode off-TPU)")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="continuous: one request arrives every K steps")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="paged continuous: partition rows + KV pool "
+                         "into N logical data shards WITHOUT a device "
+                         "mesh (host-side segments; the fault-injection "
+                         "substrate for --kill-shard on one device). "
+                         "With --mesh the data axis sets the shard "
+                         "count instead")
+    ap.add_argument("--kill-shard", action="append", default=None,
+                    metavar="STEP:SHARD",
+                    help="fault injection (repeatable): at engine step "
+                         "STEP, kill data shard SHARD — its streams "
+                         "replay from host token logs onto surviving "
+                         "shards, its pool quota is reclaimed "
+                         "(DESIGN.md §fault tolerance; requires "
+                         "--shards/--mesh with >= 2 data shards)")
+    ap.add_argument("--drain-lane", action="append", default=None,
+                    metavar="STEP:WIDTH",
+                    help="live resize (repeatable, needs --lanes): at "
+                         "step STEP, start draining the lane at mux "
+                         "width WIDTH — queued work re-routes, placed "
+                         "streams finish, the lane retires when empty")
+    ap.add_argument("--add-lane", action="append", default=None,
+                    metavar="STEP:WIDTH[:ROWS]",
+                    help="live resize (repeatable, needs --lanes): at "
+                         "step STEP, add a lane at mux width WIDTH "
+                         "(ROWS backbone rows, default "
+                         "--backbone-batch) under traffic")
+    ap.add_argument("--restart-step", type=int, default=None,
+                    metavar="STEP",
+                    help="paged continuous: at step STEP, snapshot the "
+                         "full serving state (KV pages + block tables + "
+                         "scheduler) via --ckpt-dir, rebuild the "
+                         "runtime, and hot-restore — no re-prefill of "
+                         "live rows")
+    ap.add_argument("--ckpt-dir", default=None, metavar="PATH",
+                    help="checkpoint directory for --restart-step's hot "
+                         "KV-pool snapshot/restore")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="continuous: write telemetry metrics as JSON "
                          "(counters/gauges/histograms keyed lane+shard, "
@@ -503,6 +663,45 @@ def main(argv=None):
     mux = MuxSpec(n=args.mux_n)
     key = jax.random.PRNGKey(args.seed)
     cls = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[kind]
+
+    def _ev_ints(spec, flag, want):
+        try:
+            vals = [int(x) for x in spec.split(":")]
+        except ValueError:
+            vals = []
+        if len(vals) not in want:
+            ap.error(f"{flag} expects "
+                     f"{':'.join(['N'] * min(want))} (got {spec!r})")
+        return vals
+
+    events, add_widths = [], []
+    for spec in args.kill_shard or []:
+        s, sh = _ev_ints(spec, "--kill-shard", (2,))
+        events.append({"step": s, "op": "kill_shard", "shard": sh})
+    for spec in args.drain_lane or []:
+        s, w = _ev_ints(spec, "--drain-lane", (2,))
+        events.append({"step": s, "op": "drain_lane", "width": w})
+    for spec in args.add_lane or []:
+        v = _ev_ints(spec, "--add-lane", (2, 3))
+        ev = {"step": v[0], "op": "add_lane", "width": v[1]}
+        if len(v) == 3:
+            ev["rows"] = v[2]
+        events.append(ev)
+        add_widths.append(v[1])
+    if args.restart_step is not None:
+        if not args.ckpt_dir:
+            ap.error("--restart-step requires --ckpt-dir")
+        if args.lanes is not None:
+            ap.error("--restart-step supports the single-runtime "
+                     "paged mode (drop --lanes)")
+        events.append({"step": args.restart_step, "op": "restart"})
+    if events and not (args.continuous and args.cache == "paged"):
+        ap.error("failure/resize flags (--kill-shard/--drain-lane/"
+                 "--add-lane/--restart-step) require --continuous "
+                 "--cache paged")
+    if (args.drain_lane or args.add_lane) and args.lanes is None:
+        ap.error("--drain-lane/--add-lane require --lanes")
+
     lanes = slo_mix = None
     if args.lanes is not None:
         if not (args.continuous and args.cache == "paged"):
@@ -520,9 +719,11 @@ def main(argv=None):
         lanes = [LaneSpec(n_mux=w, rows=r, chunk=args.chunk)
                  for w, r in zip(widths, lane_rows)]
         slo_mix = _parse_slo_mix(ap, args.slo_mix)
-        # one trained model per mux width (MUX-PLMs are width-specific)
+        # one trained model per mux width (MUX-PLMs are width-specific),
+        # including widths that only join later via --add-lane
         params = {w: cls.init(jax.random.fold_in(key, w), cfg,
-                              MuxSpec(n=w)) for w in set(widths)}
+                              MuxSpec(n=w))
+                  for w in set(widths) | set(add_widths)}
     else:
         params = cls.init(key, cfg, mux)
     mesh = None
@@ -537,6 +738,16 @@ def main(argv=None):
             ap.error("--mesh expects DATA,MODEL, e.g. --mesh 2,4")
         mesh = make_serve_mesh(data, model)
         n_shards = data
+    if args.shards is not None:
+        if not (args.continuous and args.cache == "paged"):
+            ap.error("--shards requires --continuous --cache paged")
+        if mesh is not None and args.shards != n_shards:
+            ap.error(f"--shards {args.shards} must match the --mesh "
+                     f"data axis ({n_shards})")
+        n_shards = args.shards
+    if args.kill_shard and n_shards < 2:
+        ap.error("--kill-shard needs >= 2 data shards "
+                 "(set --shards N or --mesh DATA,MODEL)")
     sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
                      capacity=args.prompt_len + args.new_tokens + 8,
                      dtype=jnp.float32,
@@ -579,7 +790,8 @@ def main(argv=None):
                            default_sampling=default_sampling, mesh=mesh,
                            use_kernels=args.use_kernels, lanes=lanes,
                            pool_budget=args.pool_budget,
-                           telemetry=telemetry)
+                           telemetry=telemetry, events=events or None,
+                           ckpt_dir=args.ckpt_dir)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
     # report the mode that actually ran (the runtime falls back to
@@ -624,6 +836,21 @@ def main(argv=None):
         compiled = ", ".join(f"{k}×{v}"
                              for k, v in sorted(stats["trace_counts"].items()))
         print(f"compiled programs: {compiled}")
+    rec = stats.get("recovery")
+    if events and rec:
+        lat = rec["recovery_latency_s"]
+        line = (f"recovery: {rec['shards_killed']} shard kills, "
+                f"{rec['requests_replayed']} streams replayed "
+                f"({rec['replay_prefill_tokens']} re-prefill tokens), "
+                f"{rec['lane_drains']} drains / {rec['lane_adds']} adds "
+                f"({rec['lanes_retired']} lanes retired), "
+                f"{rec['restarts']} restarts")
+        if lat:
+            line += f"; worst recovery latency {max(lat) * 1e3:.1f}ms"
+        if rec["restore_latency_s"]:
+            line += (f"; restore "
+                     f"{max(rec['restore_latency_s']) * 1e3:.1f}ms")
+        print(line)
     if telemetry is not None:
         if args.metrics_out:
             prom = telemetry.write_metrics(args.metrics_out)

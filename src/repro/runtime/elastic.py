@@ -39,6 +39,22 @@ def plan_elastic(surviving: int, *, model_parallel: int,
                        dropped=surviving - usable)
 
 
+def plan_serve_shrink(alive_shards: int, *, model_parallel: int = 1,
+                      rows: int) -> ElasticPlan:
+    """Shrink plan for the SERVE mesh after data-shard loss (DESIGN.md
+    §fault tolerance): TP degree is preserved (it is fixed by memory),
+    the dead data shard's devices drop out, and the backbone rows
+    re-round to the surviving data degree exactly like a training
+    global batch.  ``serve.recovery.RecoverySupervisor`` feeds the
+    resulting plan to ``make_elastic_mesh`` when rebuilding a runtime
+    at the shrunken size."""
+    if alive_shards < 1:
+        raise ValueError("need at least one surviving shard")
+    return plan_elastic(alive_shards * model_parallel,
+                        model_parallel=model_parallel,
+                        old_global_batch=rows)
+
+
 def make_elastic_mesh(plan: ElasticPlan, devices=None) -> Mesh:
     devices = devices if devices is not None else jax.devices()
     devs = np.asarray(devices[:plan.n_devices]).reshape(plan.mesh_shape)

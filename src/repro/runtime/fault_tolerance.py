@@ -9,6 +9,7 @@ the ``fault_hook`` to exercise the same path.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -20,6 +21,30 @@ from repro.checkpoint.manager import AsyncCheckpointManager
 
 class DeviceFailure(RuntimeError):
     """Stand-in for an XLA device/slice failure."""
+
+
+class ReplayableIterator:
+    """Seekable batch stream for ``Supervisor.run``: wraps a
+    deterministic ``step -> batch`` function so a post-failure restore
+    can rewind the data stream to the checkpointed step.  Without the
+    rewind, a restored run silently trains on the batches it would have
+    seen had it NOT failed — same step numbers, different data — which
+    diverges from the fault-free run with no error anywhere."""
+
+    def __init__(self, batch_fn: Callable, start: int = 0):
+        self.batch_fn = batch_fn
+        self._step = start
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = self.batch_fn(self._step)
+        self._step += 1
+        return batch
+
+    def seek(self, step: int):
+        self._step = step
 
 
 @dataclass
@@ -35,6 +60,12 @@ class StragglerDetector:
     alpha: float = 0.1
     z_threshold: float = 3.0
     warmup_steps: int = 5
+    # std floor as a fraction of the mean: warmup on near-identical step
+    # times (the common case — a jitted step is very stable) leaves
+    # _var ~ 0, and with only the absolute 1e-6 floor the first normal
+    # post-warmup jitter scores z in the thousands.  Any step within
+    # rel_floor * mean of the baseline is never a straggler.
+    rel_floor: float = 0.05
     _mean: float = field(default=0.0, init=False)
     _var: float = field(default=0.0, init=False)
     _n: int = field(default=0, init=False)
@@ -48,7 +79,8 @@ class StragglerDetector:
                 (1 - self.alpha) * self._mean + self.alpha * dt
             self._var = max(self._var, (dt - self._mean) ** 2)
             return False
-        z = (dt - self._mean) / max(np.sqrt(self._var), 1e-6)
+        floor = max(self.rel_floor * abs(self._mean), 1e-6)
+        z = (dt - self._mean) / max(np.sqrt(self._var), floor)
         is_straggler = z > self.z_threshold
         if is_straggler:
             self.events.append({"step": step, "dt": dt, "z": float(z)})
@@ -88,7 +120,8 @@ class Supervisor:
                 dt = time.perf_counter() - t0
                 if self.straggler.observe(step, dt) and self.on_straggler:
                     self.on_straggler(step, dt)
-                history.append(metrics)
+                # step-tagged so a restore can truncate rolled-back rows
+                history.append({**metrics, "step": step})
                 step += 1
                 if step % self.checkpoint_every == 0:
                     self.ckpt.save(step, state, metadata={"step": step})
@@ -104,6 +137,24 @@ class Supervisor:
                         state, shardings=shardings)
                 except FileNotFoundError:
                     step = start_step     # no checkpoint yet: cold restart
+                # rewind the data stream to the restored step: replaying
+                # steps k..fail on post-fail batches is silent data
+                # divergence — same step numbers, different data
+                if hasattr(data_iter, "seek"):
+                    data_iter.seek(step)
+                else:
+                    warnings.warn(
+                        "Supervisor restored a checkpoint but the data "
+                        "iterator has no .seek(step): replayed steps will "
+                        "see different batches than the fault-free run "
+                        "(use ReplayableIterator)", stacklevel=2)
+                    history.append({"event": "iter_not_replayable",
+                                    "at_step": step})
+                # drop metric rows from the rolled-back steps: they
+                # describe state that no longer exists (event rows carry
+                # "at_step", not "step", and survive)
+                history[:] = [h for h in history
+                              if "step" not in h or h["step"] < step]
                 history.append({"event": "restart", "at_step": step,
                                 "cause": repr(e)})
         self.ckpt.wait()

@@ -47,6 +47,17 @@ metrics (TTFT/TPOT/queue-wait histograms, pool gauges, preempt/cancel
 counters), a Perfetto-loadable step-span trace, and per-lane goodput
 accounting — token streams and compile counts are identical with
 telemetry on or off (CLI: ``--metrics-out`` / ``--trace-out``).
+
+Elastic fault tolerance (DESIGN.md §fault tolerance): ``serve.recovery``
+— kill-a-shard replay (``ServeRuntime.kill_shard`` fences the shard,
+``ShardedKVPool.kill_shard`` hands its quota to survivors, lost streams
+replay from host token logs), live lane resize (``LaneRouter.drain_lane``
+/ ``add_lane`` / ``pop_drained``), and hot KV-pool checkpoint/restore
+(``snapshot_state`` / ``restore_into`` through
+``checkpoint.AsyncCheckpointManager`` — restored rows resume decode with
+no re-prefill) — orchestrated by ``RecoverySupervisor`` (CLI:
+``--kill-shard`` / ``--drain-lane`` / ``--add-lane`` /
+``--restart-step``).
 """
 from repro.serve.engine import (
     ServeConfig, init_cache, prefill, prefill_chunk, decode_step,
@@ -65,3 +76,5 @@ from repro.serve.runtime import ServeRuntime
 from repro.serve.telemetry import (Telemetry, MetricsRegistry,
                                    StreamingHistogram, StepTracer,
                                    NULL_TELEMETRY)
+from repro.serve.recovery import (RecoverySupervisor, snapshot_state,
+                                  restore_state, restore_into)

@@ -111,6 +111,11 @@ class KVPool:
             return len(self._free)
         return max(0, min(len(self._free), self.quota - self.n_used_blocks))
 
+    @property
+    def ceiling(self) -> int:
+        """Device-side allocatable blocks (total minus the trash block)."""
+        return self.num_blocks - 1
+
     def set_quota(self, quota: int | None):
         """Install a new soft cap (None = uncapped).  Takes effect on the
         next allocation; live blocks above a shrunken quota stay live."""
@@ -229,6 +234,27 @@ class KVPool:
             assert len(blks) >= blocks_for(self._lens[cid], self.block_size)
             assert len(blks) <= self.max_blocks_per_seq
 
+    # -- checkpoint state (serve.recovery; DESIGN.md §fault tolerance) -----
+    def dump_state(self) -> dict:
+        """JSON-able allocator snapshot: free list, tables, lengths,
+        quota.  Block ids are LOCAL to this pool; ``ShardedKVPool``
+        nests one entry per shard.  Clients (backbone rows) are ints."""
+        return {"free": [int(b) for b in self._free],
+                "tables": {str(c): [int(b) for b in blks]
+                           for c, blks in self._tables.items()},
+                "lens": {str(c): int(n) for c, n in self._lens.items()},
+                "quota": self.quota}
+
+    def load_state(self, state: dict):
+        """Restore a ``dump_state`` snapshot into this (freshly built,
+        identically sized) pool."""
+        self._free = [int(b) for b in state["free"]]
+        self._tables = {int(c): [int(b) for b in blks]
+                        for c, blks in state["tables"].items()}
+        self._lens = {int(c): int(n) for c, n in state["lens"].items()}
+        self.quota = state["quota"]
+        self.check_invariants()
+
 
 @dataclass
 class ShardedKVPool:
@@ -251,6 +277,9 @@ class ShardedKVPool:
     n_shards: int
     n_rows: int
     _shards: list = field(init=False, repr=False)
+    # shards fenced by kill_shard: quota 0, allocations refused, their
+    # segment's pages dark until a (process-level) repair re-adds them
+    dead_shards: set = field(default_factory=set, init=False, repr=False)
 
     def __post_init__(self):
         if self.n_shards < 1:
@@ -276,6 +305,10 @@ class ShardedKVPool:
     @property
     def rows_per_shard(self) -> int:
         return self.n_rows // self.n_shards
+
+    @property
+    def alive_shards(self) -> list:
+        return [s for s in range(self.n_shards) if s not in self.dead_shards]
 
     def shard_of(self, cid) -> int:
         j = int(cid)
@@ -311,12 +344,21 @@ class ShardedKVPool:
 
     @property
     def quota(self) -> int | None:
-        """Aggregate soft cap (sum of per-shard quotas; None = uncapped)."""
-        qs = [p.quota for p in self._shards]
+        """Aggregate soft cap (sum of per-shard quotas over ALIVE shards;
+        None = uncapped).  Dead shards are pinned at quota 0 and do not
+        count toward — or un-None — the aggregate."""
+        qs = [self._shards[s].quota for s in self.alive_shards]
         return None if any(q is None for q in qs) else sum(qs)
 
+    @property
+    def ceiling(self) -> int:
+        """Device-side allocatable blocks over ALIVE shards (each shard's
+        segment minus its trash block).  A killed shard's pages go dark:
+        they stop counting toward capacity until the shard is repaired."""
+        return sum(self._shards[s].ceiling for s in self.alive_shards)
+
     def set_quota(self, quota: int | None):
-        """Split an aggregate soft cap across shards, flooring each
+        """Split an aggregate soft cap across ALIVE shards, flooring each
         shard's share at its CURRENT usage: shrinking a lane's quota
         (e.g. a rebalance donation) must never drop a hot shard below
         its live blocks — only genuinely unused headroom moves.  The
@@ -325,20 +367,58 @@ class ShardedKVPool:
         the rebalance path, which donates free quota only) the deficit
         falls back to an even split.  Per-shard quotas keep lane
         rebalancing honest under a mesh: a lane cannot borrow headroom
-        a single shard does not actually have."""
+        a single shard does not actually have.  Dead shards always get
+        quota 0 (their segment is unreachable)."""
+        alive = self.alive_shards
+        for s in self.dead_shards:
+            self._shards[s].set_quota(0)
         if quota is None:
-            for p in self._shards:
-                p.set_quota(None)
+            for s in alive:
+                self._shards[s].set_quota(None)
             return
-        used = [p.n_used_blocks for p in self._shards]
+        used = [self._shards[s].n_used_blocks for s in alive]
         if quota >= sum(used):
-            base, rem = divmod(quota - sum(used), self.n_shards)
-            for s, p in enumerate(self._shards):
-                p.set_quota(used[s] + base + (1 if s < rem else 0))
+            base, rem = divmod(quota - sum(used), len(alive))
+            for k, s in enumerate(alive):
+                self._shards[s].set_quota(used[k] + base
+                                          + (1 if k < rem else 0))
         else:
-            base, rem = divmod(quota, self.n_shards)
-            for s, p in enumerate(self._shards):
-                p.set_quota(base + (1 if s < rem else 0))
+            base, rem = divmod(quota, len(alive))
+            for k, s in enumerate(alive):
+                self._shards[s].set_quota(base + (1 if k < rem else 0))
+
+    def kill_shard(self, s: int) -> int:
+        """Fence shard ``s`` after device loss (DESIGN.md §fault
+        tolerance): its segment stops serving allocations and its quota
+        is reclaimed by the surviving shards (split evenly, remainder to
+        the low shards).  The caller must have freed/preempted the
+        shard's rows first — the dead shard's KV pages are GONE, so a
+        table still referencing them would be a correctness hole, not a
+        leak.  Returns the quota handed to the survivors (0 when
+        uncapped)."""
+        if not 0 <= s < self.n_shards:
+            raise PoolError(f"shard {s} outside [0, {self.n_shards})")
+        if s in self.dead_shards:
+            raise PoolError(f"shard {s} already dead")
+        if len(self.alive_shards) <= 1:
+            raise PoolError("cannot kill the last surviving shard")
+        p = self._shards[s]
+        if p._tables:
+            raise PoolError(
+                f"shard {s} still owns rows {sorted(p._tables)} — "
+                "preempt/free them before kill_shard")
+        reclaimed = p.quota or 0
+        p.set_quota(0)
+        self.dead_shards.add(s)
+        survivors = self.alive_shards
+        if reclaimed:
+            base, rem = divmod(reclaimed, len(survivors))
+            for k, t in enumerate(survivors):
+                q = self._shards[t].quota
+                if q is not None:
+                    self._shards[t].set_quota(q + base
+                                              + (1 if k < rem else 0))
+        return reclaimed
 
     def shard_used_blocks(self, cid) -> int:
         """Used blocks on ``cid``'s OWN shard (backpressure decisions are
@@ -367,6 +447,9 @@ class ShardedKVPool:
     # -- alloc / append / free (global ids) -------------------------------
     def allocate(self, cid, num_tokens: int = 0):
         s = self.shard_of(cid)
+        if s in self.dead_shards:
+            raise PoolError(f"shard {s} is dead (row {cid!r} cannot be "
+                            "placed there until the shard is repaired)")
         try:
             local = self._shards[s].allocate(cid, num_tokens)
         except PoolExhausted as e:
@@ -400,6 +483,11 @@ class ShardedKVPool:
     def check_invariants(self):
         for s, p in enumerate(self._shards):
             p.check_invariants()
+            # a dead shard's segment must be fully dark: no tables, no
+            # allocatable headroom
+            if s in self.dead_shards:
+                assert not p._tables, "dead shard still owns rows"
+                assert p.quota == 0, "dead shard has non-zero quota"
             # a shard's tables reference only its own segment, and never
             # any shard's trash block
             off = self._offset(s)
@@ -411,6 +499,25 @@ class ShardedKVPool:
                         "block table crosses shard boundary"
                     assert g % self.blocks_per_shard != 0, \
                         "trash block referenced by a live table"
+
+    # -- checkpoint state (serve.recovery; DESIGN.md §fault tolerance) -----
+    def dump_state(self) -> dict:
+        """JSON-able snapshot: per-shard allocator states (local block
+        ids) plus the dead-shard set."""
+        return {"shards": [p.dump_state() for p in self._shards],
+                "dead_shards": sorted(self.dead_shards)}
+
+    def load_state(self, state: dict):
+        """Restore a ``dump_state`` snapshot into this (freshly built,
+        identically shaped) pool."""
+        if len(state["shards"]) != self.n_shards:
+            raise PoolError(
+                f"snapshot has {len(state['shards'])} shards, pool has "
+                f"{self.n_shards}")
+        for p, st in zip(self._shards, state["shards"]):
+            p.load_state(st)
+        self.dead_shards = set(int(s) for s in state["dead_shards"])
+        self.check_invariants()
 
 
 # ===========================================================================

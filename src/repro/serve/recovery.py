@@ -1,0 +1,306 @@
+"""Elastic fault tolerance for the serve stack (DESIGN.md §fault
+tolerance).
+
+Three mechanisms, one supervisor:
+
+  * **kill-a-shard replay** — ``ServeRuntime.kill_shard`` fences a lost
+    data shard: its rows are preempted, its pool segment goes dark
+    (``ShardedKVPool.kill_shard`` hands the quota to survivors) and the
+    lost streams replay onto surviving shards from their host-side token
+    logs (prompt + generated-so-far — the Petals recovery model,
+    arXiv:2312.08361).  ``RecoverySupervisor.kill_shard`` wraps it with
+    recovery-latency accounting and an ``runtime.elastic`` shrink plan
+    for the post-loss mesh.
+  * **live lane resize** — ``LaneRouter.drain_lane`` / ``add_lane`` /
+    ``pop_drained`` grow or shrink the width-lane set under traffic
+    without dropping a stream; quota hand-off rides the router's budget
+    re-split (the same only-unused-quota rule as ``rebalance``).
+  * **hot KV-pool checkpoint/restore** — ``snapshot_state`` captures a
+    runtime's FULL serving state: the paged cache pytree (pool pages +
+    block tables + positions) as the checkpoint tree, and the host state
+    (allocator free lists/tables, scheduler slots + queue + mid-prefill
+    progress, per-row lengths/tokens, the next-token grid) as JSON
+    metadata.  ``restore_into`` rebuilds a fresh runtime from it: live
+    rows resume decoding at their restored positions with NO re-prefill
+    — a process restart costs one checkpoint read plus re-jitting, not a
+    mass re-prefill of every live prompt.
+
+Snapshot format (``checkpoint.manager`` layout; DESIGN.md §fault
+tolerance):
+
+    tree     = {"cache": <paged cache pytree>}       # .npy leaves
+    metadata = {"format": "mux-serve-v1",
+                "config":  {n_mux, rows, capacity, block_size,
+                            num_blocks, n_shards, lane, chunk},
+                "pool":    ShardedKVPool/KVPool.dump_state(),
+                "queue":   [request...], "slots": [[slot|null, ...]...],
+                "prefill_progress": {row: [filled, total]},
+                "dead_shards": [...], "sched_steps": int,
+                "row_len": {...}, "row_tokens": {...},
+                "next_tok": [[...]], "engine_steps": int}
+
+Restore validates the config block against the target runtime — a
+snapshot only restores into an identically shaped grid (same widths,
+rows, pool geometry); elastic shape changes go through kill-shard
+replay, not through the checkpoint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict
+
+import numpy as np
+
+from repro.checkpoint.manager import AsyncCheckpointManager
+from repro.runtime.elastic import plan_serve_shrink
+from repro.serve.batcher import Request
+from repro.serve.engine import set_block_tables
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import StreamSlot
+from repro.serve.telemetry import NULL_TELEMETRY
+
+SNAPSHOT_FORMAT = "mux-serve-v1"
+
+
+# ---------------------------------------------------------------- requests
+def _dump_request(r) -> dict:
+    return {"uid": int(r.uid),
+            "prompt": [int(x) for x in r.prompt],
+            "max_new": int(r.max_new),
+            "output": [int(x) for x in r.output],
+            "sampling": asdict(r.sampling) if r.sampling is not None
+            else None,
+            "t_submit": r.t_submit, "t_admit": r.t_admit,
+            "t_first": r.t_first,
+            "slo": r.slo, "lane": r.lane, "routed_step": r.routed_step}
+
+
+def _load_request(d: dict) -> Request:
+    return Request(uid=d["uid"], prompt=list(d["prompt"]),
+                   max_new=d["max_new"], output=list(d["output"]),
+                   sampling=(SamplingParams(**d["sampling"])
+                             if d["sampling"] is not None else None),
+                   t_submit=d["t_submit"], t_admit=d["t_admit"],
+                   t_first=d["t_first"], slo=d["slo"], lane=d["lane"],
+                   routed_step=d["routed_step"])
+
+
+# ---------------------------------------------------------------- snapshot
+def _config_of(rt) -> dict:
+    return {"n_mux": rt.n_mux, "rows": rt.nrows,
+            "capacity": rt.sc.capacity, "block_size": rt.sc.block_size,
+            "num_blocks": rt.pool.num_blocks,
+            "n_shards": rt.sc.n_shards, "lane": rt.lane,
+            "chunk": rt.chunk}
+
+
+def snapshot_state(rt):
+    """Capture a ``ServeRuntime``'s full serving state.  Returns
+    ``(tree, metadata)`` for ``AsyncCheckpointManager.save`` /
+    ``save_checkpoint`` (see module docstring for the format)."""
+    sched = rt.sched
+    slots = [[({"slot": i, "pos": s.pos, "prompt_len": s.prompt_len,
+                "request": _dump_request(s.request)}
+               if s.request is not None else None)
+              for i, s in enumerate(row)] for row in sched.slots]
+    meta = {
+        "format": SNAPSHOT_FORMAT,
+        "config": _config_of(rt),
+        "pool": rt.pool.dump_state(),
+        "queue": [_dump_request(r) for r in sched.queue],
+        "slots": slots,
+        "prefill_progress": {str(j): [int(f), int(t)]
+                             for j, (f, t) in
+                             sched.prefill_progress.items()},
+        "dead_shards": sorted(sched.dead_shards),
+        "sched_steps": sched.steps,
+        "row_len": {str(j): int(n) for j, n in rt.row_len.items()},
+        "row_tokens": {str(j): np.asarray(a).tolist()
+                       for j, a in rt.row_tokens.items()},
+        "next_tok": rt.next_tok.tolist(),
+        "engine_steps": rt.engine_steps,
+    }
+    return {"cache": rt.cache}, meta
+
+
+def restore_state(rt, cache_tree, meta):
+    """Install a ``snapshot_state`` capture into ``rt`` (a freshly built
+    runtime with the SAME config).  Restored rows resume decode from
+    their checkpointed positions — no re-prefill; rows that were
+    mid-prefill continue chunking where they stopped."""
+    if meta.get("format") != SNAPSHOT_FORMAT:
+        raise ValueError(f"not a serve snapshot: format="
+                         f"{meta.get('format')!r}")
+    want, have = meta["config"], _config_of(rt)
+    if want != have:
+        raise ValueError(
+            f"snapshot config {want} does not match runtime {have} — "
+            "restore requires an identically shaped grid")
+    rt.cache = cache_tree["cache"]
+    rt.pool.load_state(meta["pool"])
+    sched = rt.sched
+    sched.queue.clear()
+    sched.queue.extend(_load_request(d) for d in meta["queue"])
+    for j, row in enumerate(meta["slots"]):
+        for i, s in enumerate(row):
+            sched.slots[j][i] = (
+                StreamSlot(request=_load_request(s["request"]),
+                           pos=s["pos"], prompt_len=s["prompt_len"])
+                if s is not None else StreamSlot())
+    sched.prefill_progress.clear()
+    sched.prefill_progress.update(
+        {int(j): [f, t] for j, (f, t) in
+         meta["prefill_progress"].items()})
+    sched.dead_shards = set(int(s) for s in meta["dead_shards"])
+    sched.steps = meta["sched_steps"]
+    rt.row_len.clear()
+    rt.row_len.update({int(j): n for j, n in meta["row_len"].items()})
+    rt.row_tokens.clear()
+    rt.row_tokens.update({int(j): np.asarray(a, np.int32)
+                          for j, a in meta["row_tokens"].items()})
+    rt.next_tok = np.asarray(meta["next_tok"], np.int32)
+    rt.engine_steps = meta["engine_steps"]
+    # the cache leaves carried the block tables, but re-install from the
+    # restored allocator anyway: the pool is the source of truth and the
+    # mesh shardings must be re-asserted after the device_put restore
+    rt.cache = set_block_tables(
+        rt.cache, rt.pool.table_array(range(rt.nrows)))
+    rt._commit_cache()
+    return rt
+
+
+def restore_into(rt, ckpt, *, step: int | None = None):
+    """Restore the latest (or ``step``'s) snapshot from ``ckpt`` (an
+    ``AsyncCheckpointManager`` or a checkpoint directory path) into the
+    freshly built runtime ``rt``.  Returns ``(rt, step)``."""
+    if isinstance(ckpt, str):
+        ckpt = AsyncCheckpointManager(ckpt)
+    shardings = ({"cache": rt._cache_sh} if rt._cache_sh is not None
+                 else None)
+    tree, got_step, meta = ckpt.restore({"cache": rt.cache}, step=step,
+                                        shardings=shardings)
+    restore_state(rt, tree, meta)
+    return rt, got_step
+
+
+# ---------------------------------------------------------------- supervisor
+class RecoverySupervisor:
+    """Orchestrates the serve stack's failure and resize paths: shard
+    kills (with replay accounting + mesh shrink plans), lane drains and
+    adds, and hot checkpoint/restore through an
+    ``AsyncCheckpointManager``.
+
+    The supervisor is policy-free glue: every mechanism lives in the
+    runtime/router/pool layers and works without it — this class adds
+    the accounting the bench and telemetry report (recovery-latency
+    histograms, re-prefill cost, restart timing) and a single place for
+    the serve loop to hand failure/resize events to.
+    """
+
+    def __init__(self, *, ckpt_dir: str | None = None, keep_k: int = 3,
+                 telemetry=None):
+        self.ckpt = (AsyncCheckpointManager(ckpt_dir, keep_k=keep_k)
+                     if ckpt_dir else None)
+        self.tele = telemetry if telemetry is not None else NULL_TELEMETRY
+        # replayed requests still waiting for their first post-kill
+        # token: (request, len(output) at kill, t_kill)
+        self._pending: list = []
+        self.shrink_plans: list = []
+        self.stats = {"shards_killed": 0, "requests_replayed": 0,
+                      "replay_prefill_tokens": 0,
+                      "recovery_latency_s": [],
+                      "lane_drains": 0, "lane_adds": 0,
+                      "lanes_retired": 0, "snapshots": 0, "restarts": 0,
+                      "restore_latency_s": []}
+
+    # -- kill-a-shard ------------------------------------------------------
+    def kill_shard(self, rt, shard: int):
+        """Kill ``shard`` on runtime ``rt`` (see
+        ``ServeRuntime.kill_shard``) and start recovery accounting:
+        every replayed request is tracked until its first post-kill
+        token lands, which closes its ``recovery_latency_s``
+        observation (requeue wait + re-admission + re-prefill — the
+        full user-visible gap).  Also records the ``runtime.elastic``
+        shrink plan for the surviving mesh."""
+        t0 = time.perf_counter()
+        replayed = rt.kill_shard(shard)
+        self.stats["shards_killed"] += 1
+        self.stats["requests_replayed"] += len(replayed)
+        # re-prefill cost: every replayed token (prompt + generated
+        # so far) must run through prefill again on a surviving shard
+        self.stats["replay_prefill_tokens"] += sum(
+            len(r.prompt) + len(r.output) for r in replayed)
+        self._pending.extend((r, len(r.output), t0) for r in replayed)
+        model_ax = (rt.mesh.shape.get("model", 1)
+                    if rt.mesh is not None else 1)
+        alive = rt.sc.n_shards - len(rt.sched.dead_shards)
+        self.shrink_plans.append(plan_serve_shrink(
+            alive, model_parallel=model_ax, rows=rt.nrows))
+        return replayed
+
+    def note_step(self):
+        """Call once per serve step: close recovery-latency observations
+        for replayed requests whose first post-kill token arrived."""
+        if not self._pending:
+            return
+        now = time.perf_counter()
+        still = []
+        for r, n0, t0 in self._pending:
+            if len(r.output) > n0 or r.done:
+                dt = now - t0
+                self.stats["recovery_latency_s"].append(dt)
+                if self.tele.enabled:
+                    self.tele.observe("recovery_latency_s", dt,
+                                      lane=r.lane or 0)
+            else:
+                still.append((r, n0, t0))
+        self._pending = still
+
+    # -- live lane resize --------------------------------------------------
+    def drain_lane(self, router, lane: int, step: int | None = None) -> int:
+        moved = router.drain_lane(lane, step=step)
+        self.stats["lane_drains"] += 1
+        return moved
+
+    def add_lane(self, router, rt) -> int:
+        idx = router.add_lane(rt)
+        self.stats["lane_adds"] += 1
+        return idx
+
+    def pop_drained(self, router) -> list:
+        removed = router.pop_drained()
+        self.stats["lanes_retired"] += len(removed)
+        return removed
+
+    # -- hot checkpoint/restore --------------------------------------------
+    def snapshot(self, rt, step: int):
+        """Snapshot ``rt``'s full serving state at engine step ``step``
+        (host-side capture is synchronous; the disk write runs in the
+        checkpoint manager's background thread)."""
+        if self.ckpt is None:
+            raise ValueError("RecoverySupervisor needs ckpt_dir for "
+                             "snapshot/restore")
+        tree, meta = snapshot_state(rt)
+        self.ckpt.save(step, tree, metadata=meta)
+        self.stats["snapshots"] += 1
+        if self.tele.enabled:
+            self.tele.instant("snapshot", lane=rt.lane, step=step)
+
+    def restore(self, rt, *, step: int | None = None):
+        """Restore the latest (or ``step``'s) snapshot into the freshly
+        built runtime ``rt`` and record the restart's restore latency
+        (checkpoint read + state rebuild; the first post-restore step
+        additionally pays the re-jit, which the compile counters
+        expose)."""
+        if self.ckpt is None:
+            raise ValueError("RecoverySupervisor needs ckpt_dir for "
+                             "snapshot/restore")
+        t0 = time.perf_counter()
+        rt, got_step = restore_into(rt, self.ckpt, step=step)
+        dt = time.perf_counter() - t0
+        self.stats["restarts"] += 1
+        self.stats["restore_latency_s"].append(dt)
+        if self.tele.enabled:
+            self.tele.observe("restore_latency_s", dt, lane=rt.lane)
+            self.tele.instant("restore", lane=rt.lane, step=got_step)
+        return rt, got_step

@@ -148,6 +148,12 @@ class LaneRouter:
         self.runtimes = list(runtimes)
         self.spill_queue = spill_queue
         self.budget = budget
+        # live lane resize (DESIGN.md §fault tolerance): lanes draining
+        # toward removal (by lane id) and runtimes already removed —
+        # retired runtimes are kept so compile-once and stats assertions
+        # can still see them after the lane left the routing set
+        self.draining: set = set()
+        self.retired: list = []
         self.tele = telemetry if telemetry is not None else NULL_TELEMETRY
         # routing counters live on a MetricsRegistry (shared with the
         # serve-wide telemetry when enabled, private otherwise); the
@@ -180,8 +186,12 @@ class LaneRouter:
     @staticmethod
     def _ceiling(rt) -> int:
         """Device-side allocatable blocks of a lane's pool (total minus
-        one reserved trash block per shard)."""
+        one reserved trash block per shard; a pool with fenced dead
+        shards reports only its ALIVE segments via ``ceiling``)."""
         pool = rt.pool
+        ceiling = getattr(pool, "ceiling", None)
+        if ceiling is not None:
+            return ceiling
         return pool.num_blocks - getattr(pool, "n_shards", 1)
 
     def _init_quotas(self, budget: int):
@@ -212,6 +222,119 @@ class LaneRouter:
             rem -= give
         for rt, q in zip(self.runtimes, quotas):
             rt.pool.set_quota(q)
+
+    def _redistribute(self):
+        """Re-split the global budget across the CURRENT lane set after
+        an add or a drain-removal, flooring each lane at its live usage
+        (like ``rebalance``, resize moves only unused quota — live
+        blocks never strand below their lane's cap).  When the budget
+        still covers one-row floors for every lane, each lane keeps at
+        least ``max_blocks_per_seq``; mid-resize overcommit (usage
+        alone exceeds what floors allow) degrades to usage-only floors
+        and lanes regain reserve as rows drain.  No-op without a
+        budget."""
+        if self.budget is None or not self.runtimes:
+            return
+        ceil = [self._ceiling(rt) for rt in self.runtimes]
+        used = [rt.pool.n_used_blocks for rt in self.runtimes]
+        floors = [min(c, max(u, rt.sc.max_blocks_per_seq))
+                  for c, u, rt in zip(ceil, used, self.runtimes)]
+        if self.budget < sum(floors):
+            floors = [min(c, u) for c, u in zip(ceil, used)]
+        quotas = list(floors)
+        spare = max(0, self.budget - sum(floors))
+        total_ceil = sum(ceil) or 1
+        for i in range(len(self.runtimes)):
+            extra = min(ceil[i] - quotas[i], spare * ceil[i] // total_ceil)
+            quotas[i] += extra
+        rem = self.budget - sum(quotas)
+        for i in self._by_width:
+            give = min(rem, ceil[i] - quotas[i])
+            if give > 0:
+                quotas[i] += give
+                rem -= give
+        for rt, q in zip(self.runtimes, quotas):
+            rt.pool.set_quota(q)
+
+    # -- live lane resize (DESIGN.md §fault tolerance) ---------------------
+    def _index_of(self, lane: int) -> int:
+        for i, rt in enumerate(self.runtimes):
+            if rt.lane == lane:
+                return i
+        raise ValueError(f"no lane with id {lane} "
+                         f"(have {[rt.lane for rt in self.runtimes]})")
+
+    def drain_lane(self, lane: int, step: int | None = None) -> int:
+        """Start draining lane ``lane`` under traffic, dropping no
+        stream: new arrivals stop routing to it and its QUEUED (not yet
+        admitted) requests re-route across the remaining lanes; streams
+        already placed keep decoding to completion where they are (mux
+        combine is nonlinear — a placed stream cannot migrate,
+        DESIGN.md §admission).  The caller keeps stepping the lane
+        until ``pop_drained`` removes it and hands its quota back.
+        ``step``: current engine step — re-routed requests are
+        re-stamped (``routed_step``) so lane-parity replay stays exact.
+        Returns the number of requests moved to other lanes."""
+        idx = self._index_of(lane)
+        if len(self.runtimes) - len(self.draining) <= 1:
+            raise ValueError("cannot drain the last active lane")
+        self.draining.add(lane)
+        rt = self.runtimes[idx]
+        pending = list(rt.sched.queue)
+        rt.sched.queue.clear()
+        moved = 0
+        for r in pending:
+            i = self.route(r)         # draining lanes excluded below
+            if step is not None:
+                r.routed_step = step
+            self.runtimes[i].submit(r)
+            moved += int(self.runtimes[i] is not rt)
+        self.registry.inc("router_lane_drains")
+        self.tele.instant("lane_drain", lane=lane, requeued=moved)
+        return moved
+
+    def add_lane(self, rt) -> int:
+        """Add a freshly built runtime as a new lane under traffic.
+        Its width must be unique across current lanes (draining ones
+        included — two lanes at one width would make routing and the
+        per-width compile-once contract ambiguous) and its lane id
+        unused.  With a budget, quotas re-split across the grown lane
+        set (floors at live usage).  Returns the new lane's index."""
+        if any(x.n_mux == rt.n_mux for x in self.runtimes):
+            raise ValueError(f"duplicate lane width {rt.n_mux}")
+        if any(x.lane == rt.lane for x in self.runtimes + self.retired):
+            raise ValueError(f"lane id {rt.lane} already used")
+        self.runtimes.append(rt)
+        self._by_width = sorted(range(len(self.runtimes)),
+                                key=lambda i: self.runtimes[i].n_mux)
+        self._redistribute()
+        self.registry.inc("router_lane_adds")
+        self.tele.instant("lane_add", lane=rt.lane, n_mux=rt.n_mux)
+        return len(self.runtimes) - 1
+
+    def pop_drained(self) -> list:
+        """Remove draining lanes whose last stream has retired.  Their
+        runtimes move to ``self.retired`` (so end-of-run compile-once
+        and stats checks still reach them) and, with a budget, the
+        freed quota re-splits across the surviving lanes.  Call once
+        per serve step, after stepping the lanes.  Returns the removed
+        runtimes."""
+        removed = []
+        for lane in sorted(self.draining):
+            idx = self._index_of(lane)
+            rt = self.runtimes[idx]
+            if rt.has_work():
+                continue
+            self.runtimes.pop(idx)
+            self.draining.discard(lane)
+            self.retired.append(rt)
+            removed.append(rt)
+            self.tele.instant("lane_removed", lane=lane)
+        if removed:
+            self._by_width = sorted(range(len(self.runtimes)),
+                                    key=lambda i: self.runtimes[i].n_mux)
+            self._redistribute()
+        return removed
 
     def rebalance(self) -> int:
         """Move unused quota from idle lanes to lanes with queued work.
@@ -306,6 +429,15 @@ class LaneRouter:
             raise ValueError(
                 f"request uid={getattr(request, 'uid', '?')} "
                 f"({need} tokens) fits no lane")
+        # draining lanes accept no new streams — unless no active lane
+        # fits this request at all (requests are never dropped; the
+        # overflow stream simply delays that lane's removal)
+        active = [i for i in order
+                  if self.runtimes[i].lane not in self.draining]
+        if active:
+            order = active
+        else:
+            self.registry.inc("router_drain_overflow")
         loads = {i: self.runtimes[i].load() for i in order}
         chosen = next((i for i in order if not self._saturated(i, loads[i])),
                       None)

@@ -136,7 +136,16 @@ class ServeRuntime:
                     f"backbone_rows={backbone_rows} not divisible by the "
                     f"mesh 'data' axis size {data}")
         elif sc.n_shards != 1:
-            raise ValueError("ServeConfig.n_shards > 1 requires a mesh")
+            # logical sharding without a device mesh: rows and pool
+            # blocks still segment per shard (ShardedKVPool + per-row
+            # trash routing), but the device arrays stay unsharded.
+            # This is the substrate for fault-injection testing
+            # (kill_shard) on a single device; a real mesh only changes
+            # where the pages live, never the allocator behaviour.
+            if backbone_rows % sc.n_shards:
+                raise ValueError(
+                    f"backbone_rows={backbone_rows} not divisible by "
+                    f"n_shards={sc.n_shards}")
         blocks = tuple(sc.cfg.block_pattern) + tuple(sc.cfg.tail_blocks)
         if chunk is not None and (
                 any(b not in ("attn", "local") for b in blocks)
@@ -343,6 +352,67 @@ class ServeRuntime:
                 raise AssertionError(
                     f"prefill bucket {k} re-traced: {self.trace_counts}")
 
+    def kill_shard(self, shard: int):
+        """Fence a lost data shard and replay its streams (DESIGN.md
+        §fault tolerance; the Petals recovery model, arXiv:2312.08361).
+
+        The dead shard's KV pages are gone, but every stream's full
+        token log — prompt + generated-so-far — lives on the host in its
+        ``Request``, so nothing is actually lost: each of the shard's
+        rows is preempted (``preempt_row`` requeues its live requests at
+        the head of the queue) and re-admitted onto surviving shards,
+        where chunked prefill of ``row_prompts`` rebuilds exactly the KV
+        that died.  Greedy replay is exact (the pressure fuzz arm proves
+        the preempt→replay path token-identical), and sampled streams
+        resume their per-step sample sequence because the sampler folds
+        the request seed with ``len(output)``.
+
+        Surviving rows are never touched — their slots, blocks and
+        positions are unchanged, so their streams stay token-identical
+        to an undisturbed run.  The pool fences the shard
+        (``ShardedKVPool.kill_shard``): its quota moves to the
+        survivors and the scheduler's persistent ``dead_shards`` set
+        keeps admission off its rows.
+
+        Returns the replayed requests in requeue order (queue head
+        first).  Raises if the shard is already dead or is the last one
+        alive (nothing could replay the streams)."""
+        if self.sc.n_shards < 2:
+            raise ValueError("kill_shard requires n_shards >= 2")
+        if shard in self.sched.dead_shards:
+            raise ValueError(f"shard {shard} is already dead")
+        if len(self.sched.dead_shards) + 2 > self.sc.n_shards:
+            raise ValueError("cannot kill the last surviving shard")
+        rps = self.nrows // self.sc.n_shards
+        rows = range(shard * rps, (shard + 1) * rps)
+        replayed = [s.request for j in rows for s in self.sched.slots[j]
+                    if s.request is not None]
+        # reversed: preempt_row appendlefts, so ascending-row order at
+        # the queue head (matching ``replayed``) needs the last row first
+        for j in reversed(rows):
+            self.sched.preempt_row(j)
+            if j in self.row_len:
+                self.pool.free(j)
+                del self.row_len[j]
+                del self.row_tokens[j]
+            self.next_tok[:, j] = self.pad_id
+        self.sched.dead_shards.add(shard)
+        reclaimed = self.pool.kill_shard(shard)
+        # the dead rows' tables drop to all -1 on device: they stop
+        # addressing the dead segment's pages (shapes unchanged — the
+        # jitted steps never re-trace across a kill)
+        self.cache = set_block_tables(
+            self.cache, self.pool.table_array(range(self.nrows)))
+        self._commit_cache()
+        if self.tele.enabled:
+            self.tele.inc("shards_lost", lane=self.lane, shard=shard)
+            self.tele.inc("requests_replayed", len(replayed),
+                          lane=self.lane)
+            self.tele.instant("shard_lost", lane=self.lane, shard=shard,
+                              rows=rps, requests=len(replayed),
+                              reclaimed_quota=reclaimed)
+        return replayed
+
     def step(self):
         """One engine step: execute this step's batch of scheduler plans.
 
@@ -430,8 +500,8 @@ class ServeRuntime:
                 else:
                     failed.add(plan.shard)
                     retry = True
-            if not retry or len(failed) >= self.sc.n_shards \
-                    or not self.sched.queue:
+            alive = self.sc.n_shards - len(self.sched.dead_shards)
+            if not retry or len(failed) >= alive or not self.sched.queue:
                 break
             # every iteration adds at least one newly failed shard, so
             # this terminates after <= n_shards rounds

@@ -152,6 +152,11 @@ class ContinuousScheduler:
     completed: list = field(default_factory=list, init=False)
     # row -> [filled, total] for rows mid-way through chunked prefill
     prefill_progress: dict = field(default_factory=dict, init=False)
+    # shards fenced by ServeRuntime.kill_shard (DESIGN.md §fault
+    # tolerance): admission never places a group on a dead shard's rows
+    # — unlike the transient per-step ``skip_shards``, this set persists
+    # until a process-level repair rebuilds the runtime
+    dead_shards: set = field(default_factory=set, init=False)
 
     def __post_init__(self):
         if self.n_shards < 1 or self.backbone_batch % self.n_shards:
@@ -232,7 +237,8 @@ class ContinuousScheduler:
         for j in self._admission_order():
             if not self.queue:
                 break
-            if self.shard_of(j) in skip_shards:
+            if self.shard_of(j) in skip_shards \
+                    or self.shard_of(j) in self.dead_shards:
                 continue
             if any(s.request is not None for s in self.slots[j]):
                 continue

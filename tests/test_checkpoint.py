@@ -66,6 +66,61 @@ def test_async_manager(tmp_path):
     assert step == 2
 
 
+def test_async_manager_surfaces_background_failure(tmp_path, monkeypatch):
+    """A failed background write must raise from the next wait() — not
+    vanish and let restore() silently hand back an older step."""
+    import repro.checkpoint.manager as M
+    d = str(tmp_path)
+    mgr = AsyncCheckpointManager(d, keep_k=2)
+    mgr.save(1, TREE)
+    mgr.wait()
+
+    real = M.save_checkpoint
+    boom = {"armed": True}
+
+    def flaky(*a, **kw):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise OSError("disk full")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(M, "save_checkpoint", flaky)
+    mgr.save(2, TREE)
+    with pytest.raises(RuntimeError, match="background checkpoint save"):
+        mgr.wait()
+    # the error is consumed, not sticky: the manager stays usable
+    mgr.save(3, TREE)
+    mgr.wait()
+    assert mgr.last_committed == 3
+    _, step, _ = mgr.restore(TREE)
+    assert step == 3
+
+
+def test_async_manager_restore_waits_for_inflight_save(tmp_path,
+                                                       monkeypatch):
+    """restore() must join the in-flight writer first (read-your-own-
+    writes) — without the lock + join it could race the background
+    thread and miss the step that save() already accepted."""
+    import threading
+    import repro.checkpoint.manager as M
+    d = str(tmp_path)
+    mgr = AsyncCheckpointManager(d, keep_k=2)
+
+    real = M.save_checkpoint
+    release = threading.Event()
+
+    def slow(*a, **kw):
+        release.wait(timeout=10)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(M, "save_checkpoint", slow)
+    mgr.save(7, TREE)
+    assert available_steps(d) == []        # writer is parked, not done
+    release.set()
+    _, step, _ = mgr.restore(TREE)         # must block until committed
+    assert step == 7 and mgr.last_committed == 7
+
+
 def test_restore_with_shardings(tmp_path):
     """Elastic restore: device_put with explicit (single-device) sharding
     — the same path reshards across meshes on a pod."""

@@ -376,8 +376,14 @@ def test_serve_mesh_validates_device_count():
 
 def test_runtime_validates_shard_config(model):
     cfg, params = model
-    with pytest.raises(ValueError, match="requires a mesh"):
-        ServeRuntime(params, _sc(cfg, n_shards=2), 2)
+    # n_shards > 1 without a mesh is LOGICAL sharding (DESIGN.md §fault
+    # tolerance): pool segments + shard-local scheduling on one device —
+    # the substrate the kill-a-shard fuzz runs on — but rows must still
+    # split evenly across shards
+    rt = ServeRuntime(params, _sc(cfg, n_shards=2), 2)
+    assert rt.pool.n_shards == 2 and rt.mesh is None
+    with pytest.raises(ValueError, match="not divisible"):
+        ServeRuntime(params, _sc(cfg, n_shards=2), 3)
     if jax.device_count() >= 2:
         # n_shards mismatch against the mesh data axis
         with pytest.raises(ValueError, match="n_shards"):

@@ -1,0 +1,435 @@
+"""Elastic fault tolerance for the serve stack (DESIGN.md §fault
+tolerance): kill-a-shard replay, live lane resize, and hot KV-pool
+checkpoint/restore via ``serve.recovery``.
+
+The recovery invariants under test:
+
+  * **replay exactness** — killing a data shard leaves surviving streams
+    token-identical to the undisturbed run, and the dead shard's streams
+    replay to completion on surviving shards from their host token logs
+    (prompt + generated-so-far);
+  * **no re-prefill on restore** — a ``snapshot_state`` capture restored
+    into a fresh runtime resumes every live row's decode at its
+    checkpointed position with ZERO prefill events for those rows;
+  * **resize drops nothing** — draining a lane re-routes its queued work
+    and lets placed streams finish in place; adding a lane under traffic
+    keeps the per-width compile-once contract.
+
+Runs on one CPU device via logical sharding (``ShardedKVPool`` segments
+are host-side); the devices=8 ``test-mesh`` CI job re-runs it with real
+mesh shards.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MuxSpec
+from repro.configs import get_config
+from repro.models import TransformerLM
+from repro.serve import ServeConfig, Request, ServeRuntime
+from repro.serve.kvpool import ShardedKVPool, PoolError
+from repro.serve.recovery import (RecoverySupervisor, snapshot_state,
+                                  restore_state, restore_into)
+from repro.serve.router import LaneRouter
+from repro.serve.sampling import SamplingParams
+from repro.runtime.elastic import plan_serve_shrink
+from repro.runtime.fault_tolerance import (Supervisor, ReplayableIterator,
+                                           DeviceFailure)
+from repro.checkpoint import AsyncCheckpointManager
+from repro.launch.mesh import make_serve_mesh
+
+KEY = jax.random.PRNGKey(0)
+ROWS = 2
+CAPACITY = 20
+BLOCK = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    params = TransformerLM.init(KEY, cfg, MuxSpec(n=1))
+    return cfg, params
+
+
+def _sc(cfg, *, n_shards=1):
+    return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=1),
+                       capacity=CAPACITY, dtype=jnp.float32,
+                       cache_layout="paged", block_size=BLOCK,
+                       n_shards=n_shards)
+
+
+def _requests(cfg, *, sampled=False):
+    rng = np.random.default_rng(5)
+    specs = [(6, 5), (9, 4), (4, 5)]
+    reqs = []
+    for i, (plen, max_new) in enumerate(specs):
+        sp = (SamplingParams(temperature=0.7, top_k=11, seed=i)
+              if sampled and i == 1 else None)
+        reqs.append(Request(
+            uid=i, max_new=max_new, sampling=sp,
+            prompt=[int(x) for x in
+                    rng.integers(4, cfg.vocab_size, size=plen)]))
+    return reqs
+
+
+def _drive(rt, reqs, *, on_step=None, late_at=2):
+    """Serve ``reqs`` (last one arrives at step ``late_at``), invoking
+    ``on_step(rt, step) -> rt`` before each step.  Returns (uid ->
+    output tokens, final runtime)."""
+    for r in reqs[:-1]:
+        rt.submit(r)
+    step = 0
+    while rt.has_work() or step <= late_at:
+        if step == late_at:
+            rt.submit(reqs[-1])
+        if on_step is not None:
+            rt = on_step(rt, step) or rt
+        rt.step()
+        step += 1
+    rt.pool.check_invariants()
+    assert rt.pool.n_used_blocks == 0
+    return {r.uid: list(r.output) for r in rt.sched.completed}, rt
+
+
+# ------------------------------------------------------ kill-a-shard
+
+def test_kill_shard_replay_token_identical(model):
+    """Killing shard 1 mid-run: survivors untouched, the lost stream
+    replayed to completion on shard 0 — all token-identical to the
+    undisturbed 2-shard run."""
+    cfg, params = model
+    reqs = _requests(cfg)
+    base, _ = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                  chunk=4), _requests(cfg))
+    sup = RecoverySupervisor()
+
+    def on_step(rt, step):
+        if step == 3:
+            replayed = sup.kill_shard(rt, 1)
+            assert replayed, "expected a live stream on shard 1"
+            assert 1 in rt.sched.dead_shards
+        sup.note_step()
+        return rt
+
+    killed, rt = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                     chunk=4), reqs, on_step=on_step)
+    assert killed == base
+    assert rt.pool.dead_shards == {1}
+    assert sup.stats["shards_killed"] == 1
+    assert sup.stats["requests_replayed"] >= 1
+    assert sup.stats["replay_prefill_tokens"] > 0
+    # every replayed stream got its first post-kill token
+    assert (len(sup.stats["recovery_latency_s"])
+            == sup.stats["requests_replayed"])
+    # compile-once survives the kill: device shapes never changed
+    assert all(v == 1 for v in rt.trace_counts.values())
+    # the supervisor recorded a shrink plan for the surviving mesh
+    assert sup.shrink_plans[-1].mesh_shape == (1, 1)
+
+
+def test_kill_shard_guards(model):
+    cfg, params = model
+    rt1 = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)
+    with pytest.raises(ValueError, match="n_shards >= 2"):
+        rt1.kill_shard(0)
+    rt = ServeRuntime(params, _sc(cfg, n_shards=2), ROWS, chunk=4)
+    rt.kill_shard(1)
+    with pytest.raises(ValueError, match="already dead"):
+        rt.kill_shard(1)
+    with pytest.raises(ValueError, match="last surviving"):
+        rt.kill_shard(0)
+
+
+def test_sharded_pool_kill_quota_and_guards():
+    pool = ShardedKVPool(num_blocks=12, block_size=4,
+                         max_blocks_per_seq=5, n_shards=2, n_rows=2)
+    pool.set_quota(8)
+    pool.allocate(1, 7)              # row 1 lives on shard 1
+    with pytest.raises(PoolError, match="still owns rows"):
+        pool.kill_shard(1)
+    pool.free(1)
+    reclaimed = pool.kill_shard(1)
+    assert reclaimed == 4            # shard 1's even split handed over
+    assert pool.dead_shards == {1} and pool.alive_shards == [0]
+    assert pool.quota == 8           # conserved, now all on shard 0
+    assert pool.ceiling == 5         # dead segment's pages went dark
+    with pytest.raises(PoolError, match="dead"):
+        pool.allocate(1, 4)
+    with pytest.raises(PoolError, match="already dead"):
+        pool.kill_shard(1)
+    with pytest.raises(PoolError, match="last surviving"):
+        pool.kill_shard(0)
+    pool.check_invariants()
+    # dump/load round-trips the dead-shard set
+    clone = ShardedKVPool(num_blocks=12, block_size=4,
+                          max_blocks_per_seq=5, n_shards=2, n_rows=2)
+    clone.load_state(pool.dump_state())
+    assert clone.dead_shards == {1} and clone.quota == 8
+
+
+def test_plan_serve_shrink():
+    p = plan_serve_shrink(3, model_parallel=2, rows=8)
+    assert p.mesh_shape == (3, 2) and p.n_devices == 6
+    assert p.global_batch % 3 == 0
+    with pytest.raises(ValueError, match="surviving shard"):
+        plan_serve_shrink(0, rows=8)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices for a real data mesh")
+def test_kill_shard_on_mesh(model):
+    """Real-mesh variant (the devices=8 CI job): killing a data shard of
+    a meshed runtime keeps streams token-identical to the undisturbed
+    meshed run."""
+    cfg, params = model
+    mesh = make_serve_mesh(2, 1)
+    base, _ = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                  chunk=4, mesh=mesh), _requests(cfg))
+    sup = RecoverySupervisor()
+
+    def on_step(rt, step):
+        if step == 3:
+            sup.kill_shard(rt, 1)
+        sup.note_step()
+        return rt
+
+    killed, rt = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                     chunk=4, mesh=mesh),
+                        _requests(cfg), on_step=on_step)
+    assert killed == base
+    assert all(v == 1 for v in rt.trace_counts.values())
+
+
+# ------------------------------------------- hot checkpoint / restore
+
+def test_snapshot_restore_no_reprefill(model, tmp_path):
+    """Snapshot with every stream mid-decode, restore into a fresh
+    runtime (fresh jit caches — a simulated process restart): tokens
+    stay identical to the undisturbed run and the restored process
+    re-prefills NOTHING for the restored rows."""
+    cfg, params = model
+    base, _ = _drive(ServeRuntime(params, _sc(cfg), ROWS, chunk=4),
+                     _requests(cfg, sampled=True))
+    sup = RecoverySupervisor(ckpt_dir=str(tmp_path))
+    swapped = {}
+
+    def on_step(rt, step):
+        # uid 0 (6 tok) + uid 1 (9 tok) are decoding by step 4; uid 2
+        # arrived at step 2 and may be queued or mid-prefill — pick the
+        # first step where nothing is queued or mid-prefill
+        if (not swapped and step >= 4 and not rt.sched.queue
+                and not rt.sched.prefill_progress):
+            sup.snapshot(rt, step)
+            old = rt
+            rt2 = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)
+            rt2, got = sup.restore(rt2)
+            assert got == step
+            rt2.sched.completed[:0] = old.sched.completed
+            swapped["at"] = step
+            return rt2
+        return rt
+
+    got, rt2 = _drive(ServeRuntime(params, _sc(cfg), ROWS, chunk=4),
+                      _requests(cfg, sampled=True), on_step=on_step)
+    assert swapped, "schedule never reached an all-decoding step"
+    assert got == base
+    # acceptance: zero prefill events in the restored process — every
+    # restored row resumed decode from its checkpointed position
+    assert rt2.stats["prefill_events"] == 0
+    assert sup.stats["snapshots"] == 1 and sup.stats["restarts"] == 1
+    assert sup.stats["restore_latency_s"]
+
+
+def test_snapshot_restore_mid_prefill(model, tmp_path):
+    """Restore with a row mid-way through chunked prefill: the restored
+    runtime finishes only the REMAINING chunks (no restart of the
+    prompt) and the stream stays token-identical."""
+    cfg, params = model
+    rng = np.random.default_rng(9)
+    long_prompt = [int(x) for x in rng.integers(4, cfg.vocab_size,
+                                                size=14)]
+    mk = lambda: [Request(uid=0, prompt=list(long_prompt), max_new=4),
+                  Request(uid=1, prompt=[7, 8, 9], max_new=6)]
+    base, _ = _drive(ServeRuntime(params, _sc(cfg), ROWS, chunk=4), mk(),
+                     late_at=0)
+    sup = RecoverySupervisor(ckpt_dir=str(tmp_path))
+    seen = {}
+
+    def on_step(rt, step):
+        if not seen and rt.sched.prefill_progress:
+            j, (filled, total) = next(iter(
+                rt.sched.prefill_progress.items()))
+            assert 0 < filled < total
+            sup.snapshot(rt, step)
+            rt2 = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)
+            rt2, _ = sup.restore(rt2)
+            rt2.sched.completed[:0] = rt.sched.completed
+            seen["remaining"] = -(-(total - filled) // 4)
+            return rt2
+        return rt
+
+    got, rt2 = _drive(ServeRuntime(params, _sc(cfg), ROWS, chunk=4), mk(),
+                      on_step=on_step, late_at=0)
+    assert seen, "snapshot never caught a mid-prefill row"
+    assert got == base
+    # only the unfinished chunks of the mid-prefill row ran post-restore
+    assert rt2.stats["prefill_events"] == seen["remaining"]
+
+
+def test_restore_rejects_mismatched_grid(model, tmp_path):
+    cfg, params = model
+    rt = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)
+    mgr = AsyncCheckpointManager(str(tmp_path))
+    tree, meta = snapshot_state(rt)
+    mgr.save(0, tree, metadata=meta)
+    mgr.wait()
+    other = ServeRuntime(params, _sc(cfg), ROWS, chunk=8)
+    with pytest.raises(ValueError, match="does not match"):
+        restore_into(other, mgr)
+    with pytest.raises(ValueError, match="not a serve snapshot"):
+        restore_state(rt, tree, {"format": "bogus"})
+
+
+# -------------------------------------------------- live lane resize
+
+class FakeLane:
+    """Duck-typed ServeRuntime for router resize unit tests: a real
+    scheduler queue plus the load/pool surface the router reads."""
+
+    def __init__(self, lane, n_mux, rows=2):
+        from types import SimpleNamespace
+        import collections
+        from repro.serve.kvpool import KVPool, blocks_for
+        self.lane, self.n_mux, self.nrows = lane, n_mux, rows
+        mbs = blocks_for(CAPACITY, BLOCK)
+        self.sc = SimpleNamespace(capacity=CAPACITY, block_size=BLOCK,
+                                  max_blocks_per_seq=mbs)
+        self.pool = KVPool(num_blocks=rows * mbs + 1, block_size=BLOCK,
+                           max_blocks_per_seq=mbs)
+        self.sched = SimpleNamespace(queue=collections.deque())
+        self.active = 0
+
+    def submit(self, r):
+        self.sched.queue.append(r)
+
+    def has_work(self):
+        return bool(self.sched.queue) or self.active > 0
+
+    def load(self):
+        from repro.serve.router import LaneLoad
+        return LaneLoad(lane=self.lane, n_mux=self.n_mux,
+                        slots=self.n_mux * self.nrows, active=self.active,
+                        queue_depth=len(self.sched.queue),
+                        headroom_blocks=self.pool.headroom)
+
+
+def test_router_drain_requeues_and_retires():
+    lanes = [FakeLane(0, 1), FakeLane(1, 4)]
+    router = LaneRouter(lanes)
+    for uid in range(3):
+        r = Request(uid=uid, prompt=[1, 2], max_new=2, slo="throughput")
+        lanes[router.route(r)].submit(r)
+    assert len(lanes[1].sched.queue) == 3
+    lanes[1].active = 1              # one stream already placed
+    moved = router.drain_lane(1, step=5)
+    assert moved == 3                # queued work re-routed to lane 0
+    assert all(r.routed_step == 5 and r.lane == 0
+               for r in lanes[0].sched.queue)
+    # draining lane takes no new arrivals
+    r = Request(uid=9, prompt=[1], max_new=1, slo="throughput")
+    assert router.route(r) == 0
+    # not removable while its placed stream is live
+    assert router.pop_drained() == []
+    lanes[1].active = 0
+    removed = router.pop_drained()
+    assert removed == [lanes[1]] and router.retired == [lanes[1]]
+    with pytest.raises(ValueError, match="last active lane"):
+        router.drain_lane(0)
+
+
+def test_router_add_lane_unique_width_and_id():
+    lanes = [FakeLane(0, 1), FakeLane(1, 4)]
+    router = LaneRouter(lanes)
+    with pytest.raises(ValueError, match="duplicate lane width"):
+        router.add_lane(FakeLane(2, 4))
+    with pytest.raises(ValueError, match="already used"):
+        router.add_lane(FakeLane(1, 8))
+    idx = router.add_lane(FakeLane(2, 8))
+    assert router.runtimes[idx].lane == 2
+    r = Request(uid=0, prompt=[1, 2], max_new=2, slo="throughput")
+    assert router.route(r) == idx    # widest lane now preferred
+
+
+def test_router_resize_resplits_budget():
+    lanes = [FakeLane(0, 1), FakeLane(1, 4)]
+    router = LaneRouter(lanes, budget=16)
+    assert sum(rt.pool.quota for rt in lanes) == 16
+    router.add_lane(FakeLane(2, 8))
+    quotas = [rt.pool.quota for rt in router.runtimes]
+    assert sum(quotas) == 16 and all(q >= 5 for q in quotas)
+    router.drain_lane(2)
+    router.pop_drained()
+    assert sum(rt.pool.quota for rt in router.runtimes) == 16
+
+
+# ----------------------------------- supervisor data-replay (satellite)
+
+def test_supervisor_rewinds_replayable_iterator(tmp_path):
+    """The restore path must rewind the data stream and truncate
+    rolled-back metric rows: replaying steps 5..7 on post-failure
+    batches would silently diverge from the fault-free run."""
+    seen = []
+
+    def step_fn(state, batch, step):
+        assert batch["i"] == step, (
+            f"step {step} trained on batch {batch['i']} — data stream "
+            "not rewound after restore")
+        seen.append(step)
+        return {"w": state["w"] + batch["i"]}, {"loss": float(step)}
+
+    failures = {"armed": True}
+
+    def fault_hook(step):
+        if step == 7 and failures["armed"]:
+            failures["armed"] = False
+            raise DeviceFailure("slice lost")
+
+    mgr = AsyncCheckpointManager(str(tmp_path), keep_k=2)
+    sup = Supervisor(step_fn=step_fn, ckpt=mgr, checkpoint_every=5,
+                     max_restarts=2, fault_hook=fault_hook)
+    state, hist = sup.run({"w": jnp.zeros(())},
+                          ReplayableIterator(lambda s: {"i": s}), 12)
+    # 0..6 ran, restore to 5, 5..11 ran again — on the RIGHT batches
+    assert seen == list(range(7)) + list(range(5, 12))
+    # the step-5 checkpoint discarded the first attempt's 5 and 6, so
+    # the final state equals the fault-free run's exactly
+    assert float(state["w"]) == sum(range(12))
+    # rolled-back metric rows (steps 5, 6 of the first attempt) are gone
+    assert [h["step"] for h in hist if "loss" in h] == list(range(12))
+    assert [h["at_step"] for h in hist
+            if h.get("event") == "restart"] == [5]
+
+
+def test_supervisor_warns_on_non_replayable_iterator(tmp_path):
+    def step_fn(state, batch, step):
+        return {"w": state["w"] + 1.0}, {"loss": 0.0}
+
+    failures = {"armed": True}
+
+    def fault_hook(step):
+        if step == 7 and failures["armed"]:
+            failures["armed"] = False
+            raise DeviceFailure("slice lost")
+
+    mgr = AsyncCheckpointManager(str(tmp_path), keep_k=2)
+    sup = Supervisor(step_fn=step_fn, ckpt=mgr, checkpoint_every=5,
+                     max_restarts=2, fault_hook=fault_hook)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _, hist = sup.run({"w": jnp.zeros(())},
+                          iter(lambda: {"x": 0}, None), 12)
+    assert any("seek" in str(x.message) for x in w)
+    assert any(h.get("event") == "iter_not_replayable" for h in hist)

@@ -93,6 +93,21 @@ def test_straggler_detector():
     assert det.events[0]["step"] == 30
 
 
+def test_straggler_no_false_positive_after_uniform_warmup():
+    """Near-constant warmup steps drive the running variance to ~0; the
+    first micro-jitter after warmup then used to z-score to infinity and
+    page on a 0.1% blip.  The relative std floor (rel_floor) keeps the
+    denominator at a fraction of the mean step time."""
+    det = StragglerDetector(z_threshold=3.0, warmup_steps=5)
+    for i in range(20):
+        assert not det.observe(i, 1.0)     # perfectly uniform warmup
+    assert not det.observe(20, 1.001)      # 0.1% jitter: not a straggler
+    assert not det.observe(21, 1.03)       # within the 5% floor
+    assert det.events == []
+    assert det.observe(22, 2.0)            # a real straggler still pages
+    assert det.events[-1]["step"] == 22
+
+
 def test_supervisor_restores_after_failure(tmp_path):
     """Inject a device failure at step 7; the supervisor must restore the
     step-5 checkpoint and finish all 12 steps."""

@@ -215,6 +215,62 @@ def _fuzz_telemetry_once(cfg, params, seed):
     assert phs <= {"X", "i", "M"}
 
 
+def _fuzz_kill_shard_once(cfg, params, seed):
+    """Kill-a-shard arm (DESIGN.md §fault tolerance): killing a data
+    shard mid-run must leave every stream token-identical to the
+    undisturbed 2-shard run — survivors untouched, the dead shard's
+    streams replayed to completion on surviving shards from host token
+    logs — with the dead shard's pool segment drained and compile
+    counts unchanged (no reshape, no re-trace)."""
+    arrivals = _schedule(cfg, seed)
+    base = _run_arm(params, _paged_sc(cfg, n_shards=2), arrivals, chunk=4)
+    stats = run_continuous(params, _paged_sc(cfg, n_shards=2), ROWS,
+                           [(t, p.copy(), m) for t, p, m in arrivals],
+                           chunk=4,
+                           events=[{"step": 4, "op": "kill_shard",
+                                    "shard": 1}])
+    killed = {r.uid: (tuple(r.prompt), list(r.output))
+              for r in stats["completed"]}
+    assert len(killed) == len(arrivals), "kill-shard arm dropped requests"
+    assert killed == base, "kill-shard arm diverged from undisturbed run"
+    # solo-greedy exactness survives the kill (replay re-prefills the
+    # full host token log, so each stream continues exactly)
+    sc1 = _paged_sc(cfg)
+    for uid, (_, prompt, max_new) in enumerate(arrivals):
+        want = greedy_generate(params, sc1, jnp.asarray(prompt)[None],
+                               steps=max_new)[0]
+        np.testing.assert_array_equal(np.asarray(killed[uid][1]),
+                                      np.asarray(want))
+    pool = stats["pool"]
+    assert pool.dead_shards == {1}
+    assert pool.n_used_blocks == 0
+    pool.check_invariants()
+    rec = stats["recovery"]
+    assert rec["shards_killed"] == 1
+    assert (len(rec["recovery_latency_s"]) == rec["requests_replayed"])
+    assert all(v == 1 for v in stats["trace_counts"].values())
+
+
+def _fuzz_restart_once(cfg, params, seed, ckpt_dir):
+    """Hot-restart arm (DESIGN.md §fault tolerance): snapshotting the
+    full serving state mid-run, rebuilding the runtime and restoring
+    must be invisible in the token streams — restored rows resume
+    decode with no re-prefill (a restart costs a re-jit, nothing
+    else)."""
+    arrivals = _schedule(cfg, seed)
+    base = _run_arm(params, _paged_sc(cfg), arrivals, chunk=4)
+    stats = run_continuous(params, _paged_sc(cfg), ROWS,
+                           [(t, p.copy(), m) for t, p, m in arrivals],
+                           chunk=4, ckpt_dir=ckpt_dir,
+                           events=[{"step": 6, "op": "restart"}])
+    got = {r.uid: (tuple(r.prompt), list(r.output))
+           for r in stats["completed"]}
+    assert got == base, "restart arm diverged from undisturbed run"
+    assert stats["recovery"]["restarts"] == 1
+    assert stats["pool"].n_used_blocks == 0
+    stats["pool"].check_invariants()
+
+
 LANE_WIDTHS = (1, 4, 8)
 
 
@@ -270,6 +326,50 @@ def _fuzz_lanes_once(cfg, params_by_width, seed):
                 f"fixed-width run for uid {r.uid}")
 
 
+def _fuzz_lane_resize_once(cfg, params_by_width, seed):
+    """Live-resize arm (DESIGN.md §fault tolerance): drain a lane
+    mid-run (queued work re-routes, placed streams finish where they
+    are) and add a lane at a new width under traffic — no stream
+    dropped, and every lane that ever served (the retired one included)
+    stays token-identical to a fixed-width replay of its routed
+    sub-schedule, with compile counts of 1 decode + one per bucket per
+    width."""
+    arrivals = _schedule(cfg, seed)
+    rng = np.random.default_rng(seed + 99)
+    lane_arrivals = [(t, p.copy(), m, None, str(rng.choice(SLO_CLASSES)))
+                     for t, p, m in arrivals]
+    stats = run_continuous(params_by_width, _paged_sc(cfg), ROWS,
+                           lane_arrivals, chunk=4, lanes=(1, 4),
+                           events=[{"step": 3, "op": "drain_lane",
+                                    "width": 4},
+                                   {"step": 6, "op": "add_lane",
+                                    "width": 8}])
+    assert len(stats["completed"]) == len(arrivals), (
+        "resize dropped requests")
+    rec = stats["recovery"]
+    assert rec["lane_drains"] == 1 and rec["lane_adds"] == 1
+    assert rec["lanes_retired"] == 1
+    for pool in stats["pools"]:
+        assert pool.n_used_blocks == 0
+        pool.check_invariants()
+    for ls in stats["lanes"]:
+        served = bool(ls["completed"])
+        assert ls["trace_counts"].get("decode", 0) == int(served)
+        assert all(v == 1 for v in ls["trace_counts"].values())
+        if not served:
+            continue
+        routed = sorted(ls["completed"], key=lambda r: r.uid)
+        assert all(r.lane == ls["lane"] for r in routed)
+        sub = [(r.routed_step, np.asarray(r.prompt, np.int32), r.max_new)
+               for r in routed]
+        fixed = _run_arm(params_by_width[ls["n_mux"]],
+                         _paged_sc_width(cfg, ls["n_mux"]), sub, chunk=4)
+        for i, r in enumerate(routed):
+            assert fixed[i] == (tuple(r.prompt), list(r.output)), (
+                f"lane {ls['lane']} (N={ls['n_mux']}) diverged from the "
+                f"fixed-width run for uid {r.uid} across the resize")
+
+
 # ------------------------------------------------- deterministic sweeps
 
 @pytest.mark.parametrize("seed", [0, 1])
@@ -298,6 +398,22 @@ def test_fuzz_telemetry_parity_deterministic(model, seed):
 def test_fuzz_lane_parity_deterministic(lane_models, seed):
     cfg, params_by_width = lane_models
     _fuzz_lanes_once(cfg, params_by_width, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_kill_shard_deterministic(model, seed):
+    cfg, params = model
+    _fuzz_kill_shard_once(cfg, params, seed)
+
+
+def test_fuzz_restart_deterministic(model, tmp_path):
+    cfg, params = model
+    _fuzz_restart_once(cfg, params, 5, str(tmp_path / "ckpt"))
+
+
+def test_fuzz_lane_resize_deterministic(lane_models):
+    cfg, params_by_width = lane_models
+    _fuzz_lane_resize_once(cfg, params_by_width, 0)
 
 
 # ------------------------------------------------- hypothesis variants
