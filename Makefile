@@ -2,10 +2,15 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-mesh bench-smoke bench-json serve-smoke docs-check
+.PHONY: test test-mesh test-kernels bench-smoke bench-json serve-smoke docs-check
 
 test:                      ## tier-1: full test suite
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+test-kernels:              ## kernel parity layer: Pallas vs pure-JAX oracles + quant properties
+	$(PY) -m pytest -q $(PYTEST_ARGS) \
+	    tests/test_kernels.py tests/test_paged_attention.py \
+	    tests/test_quant.py
 
 test-mesh:                 ## sharded serving + churn/fault fuzz on 8 fake devices
 	REPRO_TEST_DEVICES=8 $(PY) -m pytest -q $(PYTEST_ARGS) \

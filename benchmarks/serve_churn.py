@@ -18,6 +18,14 @@ the identical trace:
                          per lane width: the paper's Table-1-style
                          throughput-vs-width curve measured at serve
                          time rather than in fill-drain batches;
+  * ``paged-chunked-kernels`` / ``paged-chunked-<kv>`` /
+    ``paged-chunked-<kv>-cap`` — the quantized-page dimension
+    (``--kv-dtype``; DESIGN.md §quantized pages): the Pallas-kernel
+    fp32 baseline, the same grid on quantized pages with fused-dequant
+    kernels (the bytes/token and TPOT delta), and the byte-parity
+    capacity arm — the pool budget of the fp32 arm re-spent on
+    quantized pages, serving MORE concurrent rows under the same
+    device bytes (the capacity headline);
   * ``recovery-kill``  — paged-chunked over two logical shard segments
                          with shard 1 killed mid-trace (DESIGN.md
                          §fault tolerance): same CSV columns (the
@@ -54,6 +62,11 @@ one ``serve_churn,lanes/N<w>,...`` row per lane):
   * goodput_tok_s    — SLO attainment × tok_s: the goodput signal the
                        lane router publishes per lane (the lanes arm's
                        per-lane rows report each lane's own goodput)
+  * bytes_tok        — KV-pool bytes one token occupies across all
+                       attention layers (payload + quant scales + slot
+                       position; ``ServeConfig.kv_bytes_per_token``)
+  * pool_bytes       — total reserved cache bytes for the arm's grid
+                       (the quantized arms' budget-parity axis)
 
 ``--json PATH`` additionally dumps every row (including the per-lane
 breakdown and routing counters) as JSON for trajectory tooling;
@@ -126,7 +139,7 @@ def latency_stats(completed):
 CSV_HEADER = ("serve_churn,arm,mux_n,tok_s,prefill_backbone,"
               "prefill_compute,prefill_events,ttft_p50,ttft_p95,"
               "tpot_p50,tpot_p95,slot_util,cache_util,requests,"
-              "slo_attainment,goodput_tok_s")
+              "slo_attainment,goodput_tok_s,bytes_tok,pool_bytes")
 
 
 def _csv(row):
@@ -137,14 +150,15 @@ def _csv(row):
           f"{row['tpot_p50']:.4f},{row['tpot_p95']:.4f},"
           f"{row['slot_util']:.3f},{row['cache_util']:.3f},"
           f"{row['requests']},"
-          f"{row['slo_attainment']:.3f},{row['goodput_tok_s']:.2f}")
+          f"{row['slo_attainment']:.3f},{row['goodput_tok_s']:.2f},"
+          f"{row.get('bytes_tok', 0)},{row.get('pool_bytes', 0)}")
 
 
 def _mean(xs):
     return float(np.mean(xs)) if len(xs) else 0.0
 
 
-def _row(arm, mux_n, stats, completed, wall=None):
+def _row(arm, mux_n, stats, completed, wall=None, sc=None, rows=None):
     wall = stats["wall"] if wall is None else wall
     row = {
         "arm": arm,
@@ -158,6 +172,21 @@ def _row(arm, mux_n, stats, completed, wall=None):
         "cache_util": _mean(stats["cache_util"]),
         "requests": len(completed),
     }
+    if sc is not None:
+        # the memory axis of the kv-dtype dimension: bytes one token
+        # occupies in the pool and the arm's total cache reservation
+        bt = sc.kv_bytes_per_token()
+        row["bytes_tok"] = bt
+        row["kv_dtype"] = sc.kv_dtype or "serve-dtype"
+        if rows is not None:
+            row["rows"] = rows
+        pools = stats.get("pools") or (
+            [stats["pool"]] if stats.get("pool") is not None else None)
+        if pools is not None:
+            row["pool_bytes"] = (sum(p.num_blocks for p in pools)
+                                 * sc.block_size * bt)
+        elif rows is not None and sc.cache_layout == "ring":
+            row["pool_bytes"] = rows * sc.capacity * bt   # contiguous rows
     row.update(latency_stats(completed))
     # goodput = TTFT-SLO attainment × tok_s (DESIGN.md §observability);
     # classless requests (the fixed arms) count against the balanced
@@ -172,7 +201,8 @@ def _row(arm, mux_n, stats, completed, wall=None):
 def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         n_requests=10, arrival_every=2.0, seed=0, block_size=8,
         chunk=8, prompt=(6, 16), new=(3, 10), lanes=(1, 2, 4),
-        json_path=None, metrics_out=None, trace_out=None):
+        kv_dtype="int8", json_path=None, metrics_out=None,
+        trace_out=None):
     cfg = get_config(arch, reduced=True)
     widths = sorted(set((mux_n,) + tuple(lanes)))
     # one trained model per mux width (MUX-PLMs are width-specific)
@@ -183,10 +213,11 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
     results = []
     print(CSV_HEADER)
 
-    def sc_for(width, layout):
+    def sc_for(width, layout, kv=None, num_blocks=None):
         return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=width),
                            capacity=capacity, dtype=jnp.float32,
-                           cache_layout=layout, block_size=block_size)
+                           cache_layout=layout, block_size=block_size,
+                           kv_dtype=kv, num_blocks=num_blocks)
 
     def trace_for():
         rng = np.random.default_rng(seed)        # identical trace per arm
@@ -204,16 +235,47 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
                    for w in lanes]
 
     for arm, layout, mode, width in fixed_arms:
-        stats = run_continuous(params[width], sc_for(width, layout), rows,
+        sc = sc_for(width, layout)
+        stats = run_continuous(params[width], sc, rows,
                                trace_for(), chunk=chunk,
                                prefill_mode=mode or "chunked")
         assert len(stats["completed"]) == n_requests
         # the arm label must describe what actually ran (the runtime
         # falls back to blocking for recurrent / contextual-mux configs)
         assert layout == "ring" or stats["prefill_mode"] == mode
-        row = _row(arm, width, stats, stats["completed"])
+        row = _row(arm, width, stats, stats["completed"], sc=sc, rows=rows)
         results.append(row)
         _csv(row)
+
+    # --kv-dtype dimension (DESIGN.md §quantized pages): the Pallas
+    # fp32 baseline, the same grid on quantized pages (bytes/token +
+    # TPOT delta), and the byte-parity capacity arm — the fp32 arm's
+    # pool budget respent on quantized pages buys MORE concurrent rows
+    if kv_dtype:
+        sc_base = sc_for(mux_n, "paged")
+        sc_q = sc_for(mux_n, "paged", kv=kv_dtype)
+        kv_arms = [("paged-chunked-kernels", sc_base, rows),
+                   (f"paged-chunked-{kv_dtype}", sc_q, rows)]
+        pool_budget = sc_base.pool_bytes(mux_n * rows)
+        bt_q = sc_q.kv_bytes_per_token()
+        mbs = sc_q.max_blocks_per_seq
+        # largest row count whose worst-case pool fits the fp32 budget
+        rows_cap = (pool_budget // (block_size * bt_q) - 1) // mbs
+        if rows_cap > rows:
+            blocks_cap = int(rows_cap) * mbs + 1
+            kv_arms.append((f"paged-chunked-{kv_dtype}-cap",
+                            sc_for(mux_n, "paged", kv=kv_dtype,
+                                   num_blocks=blocks_cap),
+                            int(rows_cap)))
+        for arm, sc, arm_rows in kv_arms:
+            stats = run_continuous(params[mux_n], sc, arm_rows,
+                                   trace_for(), chunk=chunk,
+                                   use_kernels=True)
+            assert len(stats["completed"]) == n_requests
+            row = _row(arm, mux_n, stats, stats["completed"], sc=sc,
+                       rows=arm_rows)
+            results.append(row)
+            _csv(row)
 
     # recovery arm (DESIGN.md §fault tolerance): paged-chunked over two
     # logical shard segments with shard 1 killed mid-trace — the extra
@@ -229,7 +291,8 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
                                     "shard": 1}])
     assert len(stats["completed"]) == n_requests
     rec = stats["recovery"]
-    row = _row("recovery-kill", mux_n, stats, stats["completed"])
+    row = _row("recovery-kill", mux_n, stats, stats["completed"],
+               sc=sc_kill, rows=rows)
     row["shards_killed"] = rec["shards_killed"]
     row["requests_replayed"] = rec["requests_replayed"]
     row["replay_prefill_tokens"] = rec["replay_prefill_tokens"]
@@ -248,7 +311,8 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
                                lanes=tuple(lanes), telemetry=telemetry)
         assert len(stats["completed"]) == n_requests
         agg = _row("lanes", "+".join(str(w) for w in lanes), stats,
-                   stats["completed"])
+                   stats["completed"], sc=sc_for(mux_n, "paged"),
+                   rows=rows)
         agg["widths"] = list(lanes)
         agg["routing"] = stats["routing"]
         agg["lane_goodput"] = stats["lane_stats"]
@@ -256,7 +320,8 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         by_lane = {ls["lane"]: ls for ls in stats["lane_stats"]}
         for ls in stats["lanes"]:
             lane_row = _row(f"lanes/N{ls['n_mux']}", ls["n_mux"], ls,
-                            ls["completed"], wall=stats["wall"])
+                            ls["completed"], wall=stats["wall"],
+                            sc=sc_for(ls["n_mux"], "paged"))
             lane_row["lane"] = ls["lane"]
             lane_row["rows"] = ls["rows"]
             # the router's own goodput accounting for this lane (same
@@ -301,6 +366,11 @@ def main():
     ap.add_argument("--lanes", default="1,2,4", metavar="N1,N2,...",
                     help="width-lane arm + one fixed-N arm per width "
                          "('' disables the lane arms)")
+    ap.add_argument("--kv-dtype", default="int8",
+                    choices=["", "bf16", "int8", "fp8"],
+                    help="page storage for the quantized-KV arms: adds "
+                         "a kernels baseline, a quantized arm, and the "
+                         "byte-parity capacity arm ('' disables)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="dump all rows (incl. per-lane breakdown and "
                          "routing counters) as JSON")
@@ -317,8 +387,8 @@ def main():
     t0 = time.time()
     run(arch=args.arch, mux_n=args.mux_n, rows=args.rows, n_requests=n,
         chunk=args.chunk, seed=args.seed, lanes=lanes,
-        json_path=args.json, metrics_out=args.metrics_out,
-        trace_out=args.trace_out)
+        kv_dtype=args.kv_dtype, json_path=args.json,
+        metrics_out=args.metrics_out, trace_out=args.trace_out)
     print(f"serve_churn done in {time.time() - t0:.0f}s")
 
 

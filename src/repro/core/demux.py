@@ -50,6 +50,27 @@ class RSADemux:
             out = Linear.apply(p["w2"], z)                  # (N, B, L, D)
         return LayerNorm.apply(p["ln"], out)
 
+    @staticmethod
+    def apply_fused(p, h, *, final_norm, norm_kind: str):
+        """Fused decode exit: backbone final norm (``final_norm`` params,
+        ``norm_kind`` 'rms'/'ln') + demux MLP + demux LayerNorm in ONE
+        kernel launch (``kernels/demux_rsa.py`` epilogue fusion).
+        h: the UN-normed backbone hidden state (B, L, D) -> (N, B, L, D).
+        """
+        from repro.kernels import ops as kops
+        entry_kw = {"entry_kind": norm_kind,
+                    "entry_scale": final_norm["scale"]}
+        if norm_kind == "ln":
+            entry_kw["entry_bias"] = final_norm.get(
+                "bias", jnp.zeros_like(final_norm["scale"]))
+        return kops.demux_rsa(
+            h, p["k"].astype(h.dtype),
+            p["w1h"]["w"].astype(h.dtype), p["w1k"]["w"].astype(h.dtype),
+            p["w1h"]["b"].astype(h.dtype),
+            p["w2"]["w"].astype(h.dtype), p["w2"]["b"].astype(h.dtype),
+            exit_scale=p["ln"]["scale"], exit_bias=p["ln"]["bias"],
+            **entry_kw)
+
 
 class PrefixDemux:
     """T-MUX baseline (Eq. 3): N prefix positions carry instance signatures.

@@ -59,6 +59,21 @@ class MuxEngine:
         return hs.reshape(n * b, l, d)
 
     @staticmethod
+    def separate_fused(p, spec: MuxSpec, h, *, final_norm, norm_kind: str):
+        """Fused decode exit (RSA demux only): backbone final norm +
+        demux + demux-LN as one kernel launch.  h: UN-normed backbone
+        hidden (B, L, D) -> (N*B, L, D)."""
+        from repro.core.demux import RSADemux
+        if not spec.enabled:
+            raise ValueError("separate_fused requires mux enabled")
+        if spec.demux_kind != "rsa":
+            raise ValueError("separate_fused supports the RSA demux only")
+        hs = RSADemux.apply_fused(p["demux"], h, final_norm=final_norm,
+                                  norm_kind=norm_kind)
+        n, b, l, d = hs.shape
+        return hs.reshape(n * b, l, d)
+
+    @staticmethod
     def extra_positions(spec: MuxSpec) -> int:
         """Sequence-length overhead inside the backbone (prefix baseline)."""
         return spec.n if (spec.enabled and spec.demux_kind == "prefix") else 0

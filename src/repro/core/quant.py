@@ -1,0 +1,203 @@
+"""Shared symmetric-quantization machinery.
+
+One module, two regimes, so the DP all-reduce compression path and the
+quantized KV-page pool cannot drift apart:
+
+  * **per-tensor int8** (``quantize_int8`` / ``dequantize_int8``) — the
+    gradient-compression payload format of ``optim.compression`` (error
+    feedback over the data-parallel psum).  Moved here verbatim;
+    ``optim.compression`` re-exports it, and a regression test pins the
+    error-feedback results bit-identical across the refactor.
+  * **per-vector KV quantization** (``quantize_kv`` / ``dequantize_kv``)
+    — the page-store format of ``serve.kvpool``: each (slot, kv-head)
+    head-vector of a K/V page is quantized against its own abs-max with
+    one fp32 scale per vector, stored alongside the payload in the
+    pool's ``ksc``/``vsc`` arrays.  Per-vector (not per-page) scales
+    make the pages append-only: a new token's write never requantizes
+    a neighbour slot's payload.  The Pallas paged-attention kernels
+    fuse the dequantize (``payload.astype(f32) * scale``) into their
+    page loads, so quantized pages never materialize in high precision
+    outside the kernel (DESIGN.md §quantized pages).
+
+Error-bound helpers (``kv_error_bound`` / ``paged_attention_error_bound``)
+derive the test tolerances analytically from the stored scales instead of
+hand-tuned atols — the verification contract of the differential
+kernel-parity layer in ``tests/test_paged_attention.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_LEVELS = 127.0
+FP8_MAX = 448.0          # float8_e4m3fn largest finite value
+FP8_REL = 2.0 ** -4      # e4m3 half-ulp relative rounding error (3-bit mantissa)
+EPS = 1e-12
+
+
+# ===========================================================================
+# per-tensor int8 (the gradient-compression payload; moved verbatim from
+# optim/compression.py — keep bit-identical)
+# ===========================================================================
+
+def quantize_int8(x):
+    """x fp32 -> (int8 payload, fp32 scale). Symmetric per-tensor."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, EPS) / INT8_LEVELS
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ===========================================================================
+# per-vector KV-page quantization
+# ===========================================================================
+
+def fp8_dtype():
+    """The fp8 storage dtype when this jax build has one (else None)."""
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def has_fp8() -> bool:
+    return fp8_dtype() is not None
+
+
+_KV_ALIASES = {
+    "fp32": "fp32", "f32": "fp32", "float32": "fp32",
+    "bf16": "bf16", "bfloat16": "bf16",
+    "int8": "int8",
+    "fp8": "fp8", "f8": "fp8", "float8": "fp8", "e4m3": "fp8",
+}
+KV_DTYPES = ("fp32", "bf16", "int8", "fp8")
+KV_QUANT_KINDS = ("int8", "fp8")
+
+
+def resolve_kv_dtype(name):
+    """Canonicalize a ``--kv-dtype`` spelling to one of ``KV_DTYPES``
+    (None passes through: keep the serve dtype, unquantized).  Raises for
+    unknown names and for 'fp8' when this jax build has no float8 type
+    (the backend gate — the pool falls back to nothing silently)."""
+    if name is None:
+        return None
+    canon = _KV_ALIASES.get(str(name).lower())
+    if canon is None:
+        raise ValueError(f"unknown kv dtype {name!r} "
+                         f"(choose from {sorted(set(_KV_ALIASES))})")
+    if canon == "fp8" and not has_fp8():
+        raise ValueError("kv_dtype='fp8' needs a jax build with "
+                         "jnp.float8_e4m3fn")
+    return canon
+
+
+def kv_store_dtype(kind):
+    """jnp storage dtype for a canonical kv-dtype kind."""
+    if kind == "int8":
+        return jnp.int8
+    if kind == "fp8":
+        dt = fp8_dtype()
+        if dt is None:
+            raise ValueError("fp8 unsupported by this jax build")
+        return dt
+    return {"fp32": jnp.float32, "bf16": jnp.bfloat16}[kind]
+
+
+def kv_quant_kind(dtype) -> str | None:
+    """Quantization kind implied by a page array's dtype (None when the
+    pages are plain floating-point storage)."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.int8:
+        return "int8"
+    if has_fp8() and dt == jnp.dtype(fp8_dtype()):
+        return "fp8"
+    return None
+
+
+def quantize_kv(x, kind: str):
+    """x: (..., Dh) -> (payload (..., Dh) in the store dtype, fp32 scales
+    (...)).  Symmetric per-vector scaling over the last axis: every
+    head-vector carries its own abs-max-derived scale, so page writes are
+    append-only (no requantization of neighbour slots)."""
+    if kind not in KV_QUANT_KINDS:
+        raise ValueError(f"unknown kv quant kind {kind!r}")
+    xf = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    if kind == "int8":
+        scale = jnp.maximum(amax, EPS) / INT8_LEVELS
+        q = jnp.clip(jnp.round(xf / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    else:
+        scale = jnp.maximum(amax, EPS) / FP8_MAX
+        q = (xf / scale[..., None]).astype(fp8_dtype())
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of ``quantize_kv``: payload (..., Dh) × scales (...) ->
+    fp32 (..., Dh).  The same expression the Pallas kernels fuse into
+    their page loads."""
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[..., None]
+
+
+# ===========================================================================
+# analytic error bounds (the parity layer's tolerances)
+# ===========================================================================
+
+def kv_error_bound(scale, kind: str):
+    """Worst-case |x - dequantize(quantize(x))| per element, given the
+    per-vector scales.
+
+    int8: the payload is round(x/s) with |rounding| <= 1/2, so the
+    element error is at most s/2 (clipping never adds error: |x| <= amax
+    = 127 s by construction of s).
+
+    fp8 (e4m3): rounding is relative — half-ulp 2^-4 of |x/s| <= 448 —
+    so the element error is at most 448 * 2^-4 * s = 28 s (attained only
+    by the abs-max element; smaller elements err by 2^-4 |x|).
+    """
+    s = jnp.asarray(scale, jnp.float32)
+    if kind == "int8":
+        return 0.5 * s
+    if kind == "fp8":
+        return FP8_MAX * FP8_REL * s
+    raise ValueError(f"unknown kv quant kind {kind!r}")
+
+
+def kv_value_bound(scale, kind: str):
+    """Upper bound on |dequantized value| per element: levels_max * s."""
+    s = jnp.asarray(scale, jnp.float32)
+    return (INT8_LEVELS if kind == "int8" else FP8_MAX) * s
+
+
+def paged_attention_error_bound(q, k_scales, v_scales, kind: str):
+    """Analytic bound on |fused-kernel output - fp32 oracle output| for
+    paged attention over quantized pages, derived from the stored
+    scales (no hand-tuned atols).
+
+    Per output element, with e_k / e_v the per-element K/V quantization
+    error bounds and v_max the dequantized-|V| bound:
+
+      * each logit q.k/sqrt(d) moves by at most ||q||_1 e_k / sqrt(d);
+      * softmax is 2-Lipschitz in total variation w.r.t. the l_inf
+        logit perturbation: ||p - p'||_1 <= 2 ||dlogits||_inf;
+      * the output sum_i p_i v_i then moves by at most
+        ||p - p'||_1 v_max + max_i |dv_i|.
+
+    So:  E <= 2 ||q||_1 e_k / sqrt(d) * v_max  +  e_v.
+
+    q: (B, Lq, H, Dh) fp32 queries; k_scales/v_scales: the pool's
+    (P, BS, Hkv) scale arrays.  Returns a scalar bound (max over rows,
+    heads and the whole pool's scales — conservative but fully
+    analytic).
+    """
+    qf = jnp.asarray(q, jnp.float32)
+    dh = qf.shape[-1]
+    q_l1 = jnp.max(jnp.sum(jnp.abs(qf), axis=-1))
+    s_k = jnp.max(jnp.asarray(k_scales, jnp.float32))
+    s_v = jnp.max(jnp.asarray(v_scales, jnp.float32))
+    e_k = kv_error_bound(s_k, kind)
+    e_v = kv_error_bound(s_v, kind)
+    v_max = kv_value_bound(s_v, kind)
+    return 2.0 * q_l1 * e_k * dh ** -0.5 * v_max + e_v

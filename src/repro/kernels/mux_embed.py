@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused embed + Gaussian mux-combine entry.
+
+    out[t] = (scale / N) * sum_i  emb[tokens[i, t]] ⊙ v[i]
+
+The unfused decode prologue is three HBM-traffic ops — an (N*T, D)
+embedding gather, the embedding-scale multiply, and the mux-combine
+Hadamard/mean (``kernels/mux_combine.py``) — each materializing an
+(N, T, D) intermediate.  This kernel is the whole prologue in ONE launch:
+the token ids are scalar-prefetched, so the embedding-row DMA for grid
+step (t, j, i) is issued directly against row ``tokens[i, t]`` (the same
+prefetched-index-map trick as the paged-attention kernels) and the N-term
+sum accumulates in VMEM; nothing instance-shaped ever reaches HBM.
+
+Grid: (T, D/bd, i) with the instance axis innermost (sequential on TPU)
+so the accumulator carries across instances of one (t, d-tile).
+``scale`` folds the backbone's static embedding scale (sqrt(D)) into the
+epilogue for free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tok_ref, e_ref, v_ref, o_ref, acc_ref, *, n: int, scale: float):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += (e_ref[0].astype(jnp.float32)
+                     * v_ref[0].astype(jnp.float32))
+
+    @pl.when(ni == n - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] * (scale / n)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_d", "out_dtype",
+                                             "interpret"))
+def mux_embed_combine(tokens, emb, v, *, scale: float = 1.0,
+                      block_d: int = 512, out_dtype=jnp.float32,
+                      interpret: bool = False):
+    """tokens: (N, T) int32; emb: (V, D) raw embedding table; v: (N, D)
+    mux keys -> (T, D) = (scale/N) * sum_i emb[tokens[i]] * v[i].
+    Token ids must be in-range (the serve path clamps inactive rows'
+    ids to 0 before calling)."""
+    n, t = tokens.shape
+    d = emb.shape[1]
+    bd = min(block_d, d)
+    tokens = jnp.asarray(tokens, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # tokens
+        grid=(t, pl.cdiv(d, bd), n),
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda t_, j, i, tok: (tok[i, t_], j)),
+            pl.BlockSpec((1, bd), lambda t_, j, i, tok: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda t_, j, i, tok: (t_, j)),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, scale=float(scale)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), out_dtype),
+        interpret=interpret,
+    )(tokens, emb, v)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import mux_combine as _mux
+from repro.kernels import mux_embed as _mux_embed
 from repro.kernels import demux_rsa as _demux
 from repro.kernels import flash_attention as _flash
 from repro.kernels import rwkv6 as _rwkv
@@ -24,6 +25,13 @@ def _interpret() -> bool:
 def mux_combine(x, v, **kw):
     kw.setdefault("interpret", _interpret())
     return _mux.mux_combine(x, v, **kw)
+
+
+def mux_embed_combine(tokens, emb, v, **kw):
+    """Fused embed + embedding-scale + Gaussian mux-combine (the decode
+    entry prologue as one launch)."""
+    kw.setdefault("interpret", _interpret())
+    return _mux_embed.mux_embed_combine(tokens, emb, v, **kw)
 
 
 def demux_rsa(h, k, w1h, w1k, b1, w2, b2, **kw):

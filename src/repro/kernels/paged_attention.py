@@ -51,8 +51,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0 ** 30
 
 
-def _kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, mb: int, window, causal: bool):
+def _kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, *rest, mb: int, window,
+            causal: bool, quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     ji = pl.program_id(2)
 
@@ -65,6 +69,12 @@ def _kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)            # (G, dh) grouped queries
     k = k_ref[0, 0].astype(jnp.float32)            # (bs, dh) one page
     v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        # fused dequant: int8/fp8 page payload × per-slot fp32 scale,
+        # right on the VMEM copy the DMA just landed — high-precision
+        # K/V never exists outside the kernel
+        k = k * ks_ref[0, 0][:, None]              # (bs,) scales
+        v = v * vs_ref[0, 0][:, None]
     pos = pos_ref[0]                               # (bs,) slot positions
     dh = q.shape[-1]
     q_pos = qp_ref[bi]
@@ -93,19 +103,23 @@ def _kernel(bt_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
 def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, *,
-                    window=None, causal: bool = True,
-                    interpret: bool = False):
+                    k_scales=None, v_scales=None, window=None,
+                    causal: bool = True, interpret: bool = False):
     """q: (B, 1, H, Dh); k_pages/v_pages: (P, BS, Hkv, Dh) shared pool;
     block_tables: (B, MB) int32 page ids (-1 = unallocated);
     page_pos: (P, BS) int32 absolute position per pool slot (-1 = empty);
     q_pos: (B,) int32 per-row query position (-1 = inactive row).
-    Returns (B, 1, H, Dh)."""
+    k_scales/v_scales: (P, BS, Hkv) fp32 per-slot quantization scales for
+    int8/fp8 pages — when given, dequantization fuses into the kernel's
+    page loads (the pool's low-precision payload is the only HBM-resident
+    form of the cache).  Returns (B, 1, H, Dh)."""
     b, _, h, dh = q.shape
     bs, hkv = k_pages.shape[1], k_pages.shape[2]
     g = h // hkv
     mb = block_tables.shape[1]
     block_tables = block_tables.astype(jnp.int32)
     q_pos = jnp.asarray(q_pos, jnp.int32)
+    quantized = k_scales is not None
 
     qt = q.reshape(b, hkv, g, dh)                  # group queries per kv head
     kt = k_pages.transpose(0, 2, 1, 3)             # (P, Hkv, BS, dh)
@@ -114,16 +128,29 @@ def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, *,
     def page_map(b_, h_, j, bt, qp):
         return (jnp.maximum(bt[b_, j], 0), h_, 0, 0)
 
+    def scale_map(b_, h_, j, bt, qp):
+        return (jnp.maximum(bt[b_, j], 0), h_, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j, bt, qp: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dh), page_map),
+        pl.BlockSpec((1, 1, bs, dh), page_map),
+    ]
+    args = [qt, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, bs), scale_map),
+                     pl.BlockSpec((1, 1, bs), scale_map)]
+        args += [k_scales.transpose(0, 2, 1),      # (P, Hkv, BS)
+                 v_scales.transpose(0, 2, 1)]
+    in_specs.append(
+        pl.BlockSpec((1, bs),
+                     lambda b_, h_, j, bt, qp: (jnp.maximum(bt[b_, j], 0), 0)))
+    args.append(page_pos)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                     # block_tables, q_pos
         grid=(b, hkv, mb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j, bt, qp: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dh), page_map),
-            pl.BlockSpec((1, 1, bs, dh), page_map),
-            pl.BlockSpec((1, bs),
-                         lambda b_, h_, j, bt, qp: (jnp.maximum(bt[b_, j], 0), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dh),
                                lambda b_, h_, j, bt, qp: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -133,17 +160,22 @@ def paged_attention(q, k_pages, v_pages, block_tables, page_pos, q_pos, *,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, mb=mb, window=window, causal=causal),
+        functools.partial(_kernel, mb=mb, window=window, causal=causal,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
         interpret=interpret,
-    )(block_tables, q_pos, qt, kt, vt, page_pos)
+    )(block_tables, q_pos, *args)
     return out.reshape(b, 1, h, dh)
 
 
-def _prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, pos_ref,
-                    o_ref, m_ref, l_ref, acc_ref, *, mb: int, lq: int,
-                    g: int, window, causal: bool):
+def _prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, *rest,
+                    mb: int, lq: int, g: int, window, causal: bool,
+                    quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        pos_ref, o_ref, m_ref, l_ref, acc_ref = rest
     bi = pl.program_id(0)
     ji = pl.program_id(2)
 
@@ -156,6 +188,9 @@ def _prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, pos_ref,
     q = q_ref[0, 0].astype(jnp.float32)            # (G*Lq, dh)
     k = k_ref[0, 0].astype(jnp.float32)            # (bs, dh) one page
     v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0][:, None]              # fused dequant (bs,)
+        v = v * vs_ref[0, 0][:, None]
     pos = pos_ref[0]                               # (bs,) slot positions
     dh = q.shape[-1]
     bs = k.shape[0]
@@ -191,8 +226,9 @@ def _prefill_kernel(bt_ref, qs_ref, ql_ref, q_ref, k_ref, v_ref, pos_ref,
 
 @functools.partial(jax.jit, static_argnames=("window", "causal", "interpret"))
 def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
-                            q_start, q_len, *, window=None,
-                            causal: bool = True, interpret: bool = False):
+                            q_start, q_len, *, k_scales=None, v_scales=None,
+                            window=None, causal: bool = True,
+                            interpret: bool = False):
     """Chunked-prefill attention over the pool: Lq queries per row.
 
     q: (B, Lq, H, Dh) one prompt chunk per row (KV already written to
@@ -201,7 +237,10 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     page_pos: (P, BS) int32 absolute position per pool slot (-1 = empty);
     q_start: (B,) int32 chunk start offset per row (-1 = inactive row);
     q_len: (B,) int32 valid queries per row (entries >= q_len are bucket
-    padding whose output is discarded).  Returns (B, Lq, H, Dh).
+    padding whose output is discarded).
+    k_scales/v_scales: (P, BS, Hkv) fp32 per-slot scales for quantized
+    pages (fused dequant, as in ``paged_attention``).
+    Returns (B, Lq, H, Dh).
     """
     b, lq, h, dh = q.shape
     bs, hkv = k_pages.shape[1], k_pages.shape[2]
@@ -210,6 +249,7 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     block_tables = block_tables.astype(jnp.int32)
     q_start = jnp.asarray(q_start, jnp.int32)
     q_len = jnp.asarray(q_len, jnp.int32)
+    quantized = k_scales is not None
 
     # (B, Lq, Hkv, G, Dh) -> (B, Hkv, G*Lq, Dh): G-major so the (Lq, bs)
     # mask broadcasts over groups with one reshape
@@ -221,18 +261,31 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     def page_map(b_, h_, j, bt, qs, ql):
         return (jnp.maximum(bt[b_, j], 0), h_, 0, 0)
 
+    def scale_map(b_, h_, j, bt, qs, ql):
+        return (jnp.maximum(bt[b_, j], 0), h_, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g * lq, dh),
+                     lambda b_, h_, j, bt, qs, ql: (b_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, bs, dh), page_map),
+        pl.BlockSpec((1, 1, bs, dh), page_map),
+    ]
+    args = [qt, kt, vt]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1, bs), scale_map),
+                     pl.BlockSpec((1, 1, bs), scale_map)]
+        args += [k_scales.transpose(0, 2, 1),      # (P, Hkv, BS)
+                 v_scales.transpose(0, 2, 1)]
+    in_specs.append(
+        pl.BlockSpec((1, bs),
+                     lambda b_, h_, j, bt, qs, ql:
+                     (jnp.maximum(bt[b_, j], 0), 0)))
+    args.append(page_pos)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                     # bt, q_start, q_len
         grid=(b, hkv, mb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g * lq, dh),
-                         lambda b_, h_, j, bt, qs, ql: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, bs, dh), page_map),
-            pl.BlockSpec((1, 1, bs, dh), page_map),
-            pl.BlockSpec((1, bs),
-                         lambda b_, h_, j, bt, qs, ql:
-                         (jnp.maximum(bt[b_, j], 0), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g * lq, dh),
                                lambda b_, h_, j, bt, qs, ql: (b_, h_, 0, 0)),
         scratch_shapes=[
@@ -243,11 +296,11 @@ def paged_prefill_attention(q, k_pages, v_pages, block_tables, page_pos,
     )
     out = pl.pallas_call(
         functools.partial(_prefill_kernel, mb=mb, lq=lq, g=g,
-                          window=window, causal=causal),
+                          window=window, causal=causal, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g * lq, dh), q.dtype),
         interpret=interpret,
-    )(block_tables, q_start, q_len, qt, kt, vt, page_pos)
+    )(block_tables, q_start, q_len, *args)
     return out.reshape(b, hkv, g, lq, dh).transpose(0, 3, 1, 2, 4) \
               .reshape(b, lq, h, dh)
 
@@ -282,7 +335,8 @@ def _specs(mesh, axis: str, head):
 
 
 def sharded_paged_attention(mesh, q, k_pages, v_pages, block_tables,
-                            page_pos, q_pos, *, window=None,
+                            page_pos, q_pos, *, k_scales=None,
+                            v_scales=None, window=None,
                             causal: bool = True, interpret: bool = False,
                             axis: str = "data"):
     """``paged_attention`` under ``shard_map``: rows (axis 0 of q /
@@ -293,18 +347,39 @@ def sharded_paged_attention(mesh, q, k_pages, v_pages, block_tables,
     table references only its own shard's segment) — collective-free.
     When both head counts divide the 'model' axis, heads split over
     'model' too (each model shard runs its own kv-head group); otherwise
-    they replicate over 'model'."""
+    they replicate over 'model'.  Quantized pools pass their
+    (P, BS, Hkv) scales, which shard exactly like the pages (blocks on
+    ``axis``, Hkv on the head axis)."""
     from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
     n = mesh.shape[axis]
     bps = k_pages.shape[0] // n
     head = _head_axis(mesh, q.shape[2], k_pages.shape[2])
+    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
+    quantized = k_scales is not None
+
+    if quantized:
+        sc_sp = P(axis, None, head)
+
+        def local(qs, kp, vp, ks, vs, bt, pp, qp):
+            return paged_attention(qs, kp, vp, _local_tables(bt, axis, bps),
+                                   pp, qp, k_scales=ks, v_scales=vs,
+                                   window=window, causal=causal,
+                                   interpret=interpret)
+
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(q_sp, page_sp, page_sp, sc_sp, sc_sp, bt_sp, bt_sp,
+                      vec_sp),
+            out_specs=q_sp, check_rep=False,
+        )(q, k_pages, v_pages, k_scales, v_scales, block_tables, page_pos,
+          q_pos)
 
     def local(qs, kp, vp, bt, pp, qp):
         return paged_attention(qs, kp, vp, _local_tables(bt, axis, bps),
                                pp, qp, window=window, causal=causal,
                                interpret=interpret)
 
-    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
     return shard_map(
         local, mesh=mesh,
         in_specs=(q_sp, page_sp, page_sp, bt_sp, bt_sp, vec_sp),
@@ -314,24 +389,43 @@ def sharded_paged_attention(mesh, q, k_pages, v_pages, block_tables,
 
 def sharded_paged_prefill_attention(mesh, q, k_pages, v_pages,
                                     block_tables, page_pos, q_start,
-                                    q_len, *, window=None,
-                                    causal: bool = True,
+                                    q_len, *, k_scales=None, v_scales=None,
+                                    window=None, causal: bool = True,
                                     interpret: bool = False,
                                     axis: str = "data"):
     """``paged_prefill_attention`` under ``shard_map`` — same partitioning
     and shard-locality contract (including the conditional 'model' head
-    split) as ``sharded_paged_attention``."""
+    split and quantized-scale handling) as ``sharded_paged_attention``."""
     from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
     n = mesh.shape[axis]
     bps = k_pages.shape[0] // n
     head = _head_axis(mesh, q.shape[2], k_pages.shape[2])
+    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
+    quantized = k_scales is not None
+
+    if quantized:
+        sc_sp = P(axis, None, head)
+
+        def local(qs, kp, vp, ks, vs, bt, pp, q0, ql):
+            return paged_prefill_attention(
+                qs, kp, vp, _local_tables(bt, axis, bps), pp, q0, ql,
+                k_scales=ks, v_scales=vs, window=window, causal=causal,
+                interpret=interpret)
+
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(q_sp, page_sp, page_sp, sc_sp, sc_sp, bt_sp, bt_sp,
+                      vec_sp, vec_sp),
+            out_specs=q_sp, check_rep=False,
+        )(q, k_pages, v_pages, k_scales, v_scales, block_tables, page_pos,
+          q_start, q_len)
 
     def local(qs, kp, vp, bt, pp, q0, ql):
         return paged_prefill_attention(
             qs, kp, vp, _local_tables(bt, axis, bps), pp, q0, ql,
             window=window, causal=causal, interpret=interpret)
 
-    q_sp, page_sp, bt_sp, vec_sp = _specs(mesh, axis, head)
     return shard_map(
         local, mesh=mesh,
         in_specs=(q_sp, page_sp, page_sp, bt_sp, bt_sp, vec_sp, vec_sp),

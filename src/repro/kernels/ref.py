@@ -20,6 +20,30 @@ def demux_rsa_ref(h, k, w1h, w1k, b1, w2, b2):
     return z @ w2 + b2
 
 
+def mux_embed_ref(tokens, emb, v, *, scale=1.0):
+    """Oracle for the fused embed+mux entry: tokens (N, T) int32,
+    emb (V, D), v (N, D) -> (T, D) = (scale/N) sum_i emb[tokens_i] v_i."""
+    x = emb[tokens]                        # (N, T, D)
+    return jnp.einsum("ntd,nd->td", x, v) * (scale / tokens.shape[0])
+
+
+def demux_rsa_fused_ref(h, k, w1h, w1k, b1, w2, b2, *, entry_kind=None,
+                        entry_scale=None, entry_bias=None, exit_scale=None,
+                        exit_bias=None):
+    """Oracle for the fused decode exit: backbone final norm (RMS/LN) ->
+    RSA demux MLP -> demux LayerNorm, as the composition of the
+    unfused reference pieces."""
+    from repro.nn import LayerNorm, RMSNorm
+    if entry_kind == "rms":
+        h = RMSNorm.apply({"scale": entry_scale}, h)
+    elif entry_kind == "ln":
+        h = LayerNorm.apply({"scale": entry_scale, "bias": entry_bias}, h)
+    out = demux_rsa_ref(h, k, w1h, w1k, b1, w2, b2)
+    if exit_scale is not None:
+        out = LayerNorm.apply({"scale": exit_scale, "bias": exit_bias}, out)
+    return out
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0,
                         logit_softcap=None):
     """q: (B, Lq, H, Dh); k,v: (B, Lk, Hkv, Dh) — naive oracle."""
@@ -82,6 +106,35 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, page_pos, q_pos,
                                window=window, kv_valid=pos >= 0)
     mask &= (q_pos >= 0)[:, None, None]
     return attention_core(q, k, v, mask=mask)
+
+
+def paged_attention_quant_ref(q, k_pages, v_pages, k_scales, v_scales,
+                              block_tables, page_pos, q_pos, *,
+                              window=None, causal=True):
+    """Oracle for the fused-dequant decode kernel: dequantize the whole
+    pool in fp32 (exactly the per-slot ``payload * scale`` the kernel
+    fuses into its page loads), then run the unquantized oracle.  The
+    parity tests assert the fused kernel against THIS to near-machine
+    precision, and against the pristine-fp32 oracle within the analytic
+    ``core.quant.paged_attention_error_bound``."""
+    from repro.core.quant import dequantize_kv
+    k = dequantize_kv(k_pages, k_scales)
+    v = dequantize_kv(v_pages, v_scales)
+    return paged_attention_ref(q, k, v, block_tables, page_pos, q_pos,
+                               window=window, causal=causal)
+
+
+def paged_prefill_attention_quant_ref(q, k_pages, v_pages, k_scales,
+                                      v_scales, block_tables, page_pos,
+                                      q_start, q_len, *, window=None,
+                                      causal=True):
+    """Chunked-prefill analogue of ``paged_attention_quant_ref``."""
+    from repro.core.quant import dequantize_kv
+    k = dequantize_kv(k_pages, k_scales)
+    v = dequantize_kv(v_pages, v_scales)
+    return paged_prefill_attention_ref(q, k, v, block_tables, page_pos,
+                                       q_start, q_len, window=window,
+                                       causal=causal)
 
 
 def paged_prefill_attention_ref(q, k_pages, v_pages, block_tables,

@@ -587,6 +587,12 @@ def main(argv=None):
                     help="lanes: global KV block budget partitioned into "
                          "per-lane quotas; the router rebalances unused "
                          "quota toward queued lanes")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp32", "bf16", "int8", "fp8"],
+                    help="paged continuous serving: KV-page storage dtype "
+                         "(int8/fp8 store quantized pages with per-slot "
+                         "scales; dequant fuses into the Pallas kernels "
+                         "under --use-kernels). Default: serve dtype")
     ap.add_argument("--use-kernels", action="store_true",
                     help="paged continuous serving: route decode/chunk "
                          "attention through the Pallas paged kernels "
@@ -748,11 +754,14 @@ def main(argv=None):
     if args.kill_shard and n_shards < 2:
         ap.error("--kill-shard needs >= 2 data shards "
                  "(set --shards N or --mesh DATA,MODEL)")
+    if args.kv_dtype and not (args.continuous and args.cache == "paged"):
+        ap.error("--kv-dtype requires --continuous --cache paged")
     sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
                      capacity=args.prompt_len + args.new_tokens + 8,
                      dtype=jnp.float32,
                      cache_layout=args.cache if args.continuous else "ring",
-                     block_size=args.block_size, n_shards=n_shards)
+                     block_size=args.block_size, n_shards=n_shards,
+                     kv_dtype=args.kv_dtype)
     default_sampling = None
     if args.temperature > 0:
         default_sampling = sampling.SamplingParams(

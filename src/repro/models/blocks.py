@@ -342,13 +342,14 @@ def init_kv_cache(cfg, batch: int, capacity: int, dtype):
 
 
 def init_paged_kv_cache(cfg, batch: int, num_blocks: int, block_size: int,
-                        max_blocks: int, dtype):
+                        max_blocks: int, dtype, quant=None):
     """Paged layout (DESIGN.md): a shared block pool per layer plus a
     per-row block table.  The table rows are driven by the host-side
-    ``serve.kvpool.KVPool`` allocator via ``serve.set_block_tables``."""
+    ``serve.kvpool.KVPool`` allocator via ``serve.set_block_tables``.
+    quant: 'int8'/'fp8' stores quantized pages + per-slot scales."""
     from repro.serve import kvpool
     c = kvpool.init_pages(num_blocks, block_size, cfg.n_kv_heads,
-                          cfg.head_dim, dtype)
+                          cfg.head_dim, dtype, quant=quant)
     c["bt"] = jnp.full((batch, max_blocks), -1, jnp.int32)
     return c
 
@@ -417,6 +418,12 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
             if ctx.get("use_kernels") and cfg.logit_softcap is None:
                 from repro.kernels import ops as kops
                 mesh = ctx.get("mesh")
+                # quantized pages: hand the kernels the per-slot scales so
+                # dequant fuses into the page loads (paged_view below
+                # would materialize fp32 pages outside the kernel)
+                scale_kw = ({"k_scales": cache["ksc"],
+                             "v_scales": cache["vsc"]}
+                            if "ksc" in cache else {})
                 if (mesh is not None and mesh.shape.get("data", 1) > 1
                         and cache["bt"].shape[0] % mesh.shape["data"] == 0):
                     # shard_map: each data shard runs the kernel over its
@@ -426,12 +433,12 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
                     o = kops.sharded_paged_attention(
                         mesh, q, cache["kp"], cache["vp"], cache["bt"],
                         cache["ppos"], posm[:, 0], window=window,
-                        causal=cfg.causal)
+                        causal=cfg.causal, **scale_kw)
                 else:
                     o = kops.paged_attention(
                         q, cache["kp"], cache["vp"], cache["bt"],
                         cache["ppos"], posm[:, 0], window=window,
-                        causal=cfg.causal)
+                        causal=cfg.causal, **scale_kw)
             else:
                 kc, vc, kvpos = paged_view(cache)
                 mask = make_attention_mask(
@@ -471,6 +478,8 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
             q_start = posm[:, 0]                            # -1 iff inactive
             q_len = (posm >= 0).sum(-1)
             mesh = ctx.get("mesh")
+            scale_kw = ({"k_scales": cache["ksc"], "v_scales": cache["vsc"]}
+                        if "ksc" in cache else {})
             # shard_map only for FULL-GRID chunk batches: a rows= subset
             # has no guaranteed row->shard alignment (shard_map would
             # rebase a row's block ids against the wrong shard's offset
@@ -481,11 +490,13 @@ def apply_attention(p, cfg, blk, x, ctx, cache):
                     and bt.shape[0] % mesh.shape["data"] == 0):
                 o = kops.sharded_paged_prefill_attention(
                     mesh, q, cache["kp"], cache["vp"], bt, cache["ppos"],
-                    q_start, q_len, window=window, causal=cfg.causal)
+                    q_start, q_len, window=window, causal=cfg.causal,
+                    **scale_kw)
             else:
                 o = kops.paged_prefill_attention(
                     q, cache["kp"], cache["vp"], bt, cache["ppos"],
-                    q_start, q_len, window=window, causal=cfg.causal)
+                    q_start, q_len, window=window, causal=cfg.causal,
+                    **scale_kw)
         else:
             kc, vc, kvpos = paged_view({**cache, "bt": bt})
             mask = make_attention_mask(
@@ -922,7 +933,7 @@ def apply_block(p, cfg, blk: str, x, ctx, cache):
 
 def init_block_cache(cfg, blk: str, batch: int, capacity: int, dtype, *,
                      layout: str = "ring", block_size: int = 16,
-                     num_blocks: int | None = None):
+                     num_blocks: int | None = None, kv_quant=None):
     if layout not in ("ring", "paged"):
         raise ValueError(f"unknown cache layout {layout!r}")
     if layout == "paged":
@@ -938,7 +949,7 @@ def init_block_cache(cfg, blk: str, batch: int, capacity: int, dtype, *,
             from repro.serve.kvpool import blocks_for
             max_blocks = blocks_for(capacity, block_size)
             return init_paged_kv_cache(cfg, batch, num_blocks, block_size,
-                                       max_blocks, dtype)
+                                       max_blocks, dtype, quant=kv_quant)
         if blk == "xattn":
             raise NotImplementedError("paged layout: decoder-only families")
         # recurrent state (rglru / rwkv) is O(1) per row — unchanged

@@ -65,19 +65,23 @@ class TransformerLM:
     @staticmethod
     def init_cache(cfg: ModelConfig, batch: int, capacity: int,
                    dtype=jnp.bfloat16, *, layout: str = "ring",
-                   block_size: int = 16, num_blocks: int | None = None):
+                   block_size: int = 16, num_blocks: int | None = None,
+                   kv_quant: str | None = None):
         """batch = backbone batch (already divided by mux N).
 
         layout='paged' replaces each attention layer's contiguous ring
         buffer with a shared block pool + per-row block table (DESIGN.md);
         tables are installed via ``serve.set_block_tables``.
+        kv_quant='int8'/'fp8' (paged only) stores quantized pages with
+        per-slot scales (``dtype`` is then the storage dtype handed in
+        by ``ServeConfig.page_dtype``).
         """
         pat = cfg.block_pattern
 
         def one(blk):
             return init_block_cache(cfg, blk, batch, capacity, dtype,
                                     layout=layout, block_size=block_size,
-                                    num_blocks=num_blocks)
+                                    num_blocks=num_blocks, kv_quant=kv_quant)
 
         periods = tuple(
             jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -102,15 +106,36 @@ class TransformerLM:
         Returns dict(logits | hidden, aux, cache).
         """
         d = cfg.d_model
-        if embeds is None:
-            x = Embedding.apply(params["embed"], tokens, dtype=dtype)
+        # Fused decode entry: embed-gather + embedding-scale + Gaussian
+        # mux-combine as ONE Pallas launch (kernels/mux_embed.py) — the
+        # (N*B, L, D) embeddings never materialize.  Gated to the
+        # gaussian/rsa mux config (contextual mux runs transformer
+        # layers; the prefix demux splices extra positions in combine).
+        fuse_entry = (use_kernels and embeds is None and mux.enabled
+                      and mux.mux_kind == "gaussian"
+                      and mux.demux_kind != "prefix"
+                      and "mux_engine" in params)
+        if fuse_entry:
+            from repro.kernels import ops as kops
+            nb, l_in = tokens.shape
+            bb = nb // mux.n
+            x = kops.mux_embed_combine(
+                jnp.maximum(tokens, 0).reshape(mux.n, bb * l_in),
+                params["embed"]["table"],
+                params["mux_engine"]["mux"]["v"],
+                scale=math.sqrt(d) if cfg.embedding_scale else 1.0,
+                out_dtype=dtype)
+            x = x.reshape(bb, l_in, d)
         else:
-            x = embeds.astype(dtype)
-        if cfg.embedding_scale:
-            x = x * jnp.asarray(math.sqrt(d), dtype)
+            if embeds is None:
+                x = Embedding.apply(params["embed"], tokens, dtype=dtype)
+            else:
+                x = embeds.astype(dtype)
+            if cfg.embedding_scale:
+                x = x * jnp.asarray(math.sqrt(d), dtype)
 
-        # --- multiplex ------------------------------------------------
-        x = MuxEngine.combine(params.get("mux_engine", {}), mux, x)
+            # --- multiplex --------------------------------------------
+            x = MuxEngine.combine(params.get("mux_engine", {}), mux, x)
         b, l, _ = x.shape
 
         # --- positions --------------------------------------------------
@@ -185,13 +210,23 @@ class TransformerLM:
             new_tail.append(c)
             aux_total = aux_total + a
 
-        x = (RMSNorm if cfg.norm == "rms" else LayerNorm).apply(
-            params["final_norm"], x)
+        # Fused decode exit: backbone final norm + RSA demux + demux-LN
+        # as ONE Pallas launch (kernels/demux_rsa.py epilogue fusion).
+        fuse_exit = (use_kernels and demux and mux.enabled
+                     and mux.demux_kind == "rsa" and "mux_engine" in params)
+        if fuse_exit:
+            x = MuxEngine.separate_fused(
+                params["mux_engine"], mux, x,
+                final_norm=params["final_norm"],
+                norm_kind="rms" if cfg.norm == "rms" else "ln")
+        else:
+            x = (RMSNorm if cfg.norm == "rms" else LayerNorm).apply(
+                params["final_norm"], x)
 
-        # --- demultiplex -------------------------------------------------
-        if demux:
-            x = MuxEngine.separate(params.get("mux_engine", {}), mux, x,
-                                   use_kernel=use_kernels)
+            # --- demultiplex ---------------------------------------------
+            if demux:
+                x = MuxEngine.separate(params.get("mux_engine", {}), mux, x,
+                                       use_kernel=use_kernels)
 
         out = {"aux": aux_total}
         if decode:

@@ -17,17 +17,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def quantize_int8(x):
-    """x fp32 -> (int8 payload, fp32 scale). Symmetric per-tensor."""
-    amax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+# The per-tensor symmetric quantizer lives in core.quant (shared with the
+# quantized KV-page pool); re-exported here so `repro.optim.quantize_int8`
+# keeps working and the error-feedback math below stays bit-identical.
+from repro.core.quant import quantize_int8, dequantize_int8  # noqa: F401
 
 
 def compressed_psum(grad, error, axis_name: str):

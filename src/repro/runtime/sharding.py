@@ -176,6 +176,8 @@ def cache_specs(cache, mesh: Mesh):
     resident pages):
 
       kp/vp (…, P, BS, Hkv, hd)    — blocks on DP; Hkv (else hd) on model
+      ksc/vsc (…, P, BS, Hkv)      — quantized-page scales: blocks on DP;
+                                     Hkv on model (follows kp/vp)
       ppos  (…, P, BS)             — blocks on DP
       bt    (…, B, MB)             — rows on DP
     """
@@ -215,6 +217,10 @@ def cache_specs(cache, mesh: Mesh):
             if _fits(x.shape[x.ndim - 2], mesh, "model"):
                 spec[x.ndim - 2] = "model"
             elif _fits(x.shape[x.ndim - 1], mesh, "model"):
+                spec[x.ndim - 1] = "model"
+        elif name in ("ksc", "vsc"):
+            spec[x.ndim - 3] = dp_for(x.ndim - 3)
+            if _fits(x.shape[x.ndim - 1], mesh, "model"):
                 spec[x.ndim - 1] = "model"
         elif name == "ppos":
             spec[x.ndim - 2] = dp_for(x.ndim - 2)

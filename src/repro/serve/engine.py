@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import MuxSpec
+from repro.core import quant as quantlib
 from repro.models import TransformerLM, EncDecLM, VLM
 from repro.models.config import ModelConfig
 from repro.serve.kvpool import KVPool, ShardedKVPool, blocks_for
@@ -53,10 +54,46 @@ class ServeConfig:
     num_blocks: int | None = None   # paged: pool size (default: worst case)
     n_shards: int = 1               # paged: data-shard count (mesh serving);
                                     # rows and pool blocks segment per shard
+    kv_dtype: str | None = None     # paged: page storage — fp32 | bf16 |
+                                    # int8 | fp8 (None = serve dtype)
 
     @property
     def max_blocks_per_seq(self) -> int:
         return blocks_for(self.capacity, self.block_size)
+
+    @property
+    def kv_quant(self) -> str | None:
+        """Quantization kind for the page store ('int8'/'fp8'), or None
+        for plain floating-point pages."""
+        kind = quantlib.resolve_kv_dtype(self.kv_dtype)
+        return kind if kind in quantlib.KV_QUANT_KINDS else None
+
+    @property
+    def page_dtype(self):
+        """Storage dtype of the KV pages under this config."""
+        kind = quantlib.resolve_kv_dtype(self.kv_dtype)
+        if kind is None:
+            return self.dtype
+        return quantlib.kv_store_dtype(kind)
+
+    def kv_bytes_per_token(self) -> int:
+        """Pool bytes one token occupies across all attention layers
+        (payload + scales + the shared slot-position entry)."""
+        cfg = self.cfg
+        n_attn = sum(1 for b in (list(cfg.block_pattern) * cfg.n_periods
+                                 + list(cfg.tail_blocks))
+                     if b in ("attn", "local"))
+        hd = cfg.n_kv_heads * cfg.head_dim
+        per_layer = 2 * hd * jnp.dtype(self.page_dtype).itemsize
+        if self.kv_quant is not None:
+            per_layer += 2 * cfg.n_kv_heads * 4          # fp32 ksc/vsc
+        per_layer += 4                                   # int32 ppos entry
+        return n_attn * per_layer
+
+    def pool_bytes(self, global_batch: int) -> int:
+        """Total device bytes of the page pool for ``global_batch``."""
+        return (self.pool_blocks(global_batch) * self.block_size
+                * self.kv_bytes_per_token())
 
     def pool_blocks(self, global_batch: int) -> int:
         """Pool size: explicit, or worst case (every row at capacity) +
@@ -109,9 +146,14 @@ def init_cache(sc: ServeConfig, global_batch: int):
         if sc.kind != "lm":
             raise NotImplementedError(
                 "paged cache layout: decoder-only LM families")
+        # quantized pools pick their storage dtype from kv_quant inside
+        # init_pages; the dtype arg then only types non-attention state
+        # (rglru/rwkv), which must stay floating-point
+        dt = sc.dtype if sc.kv_quant is not None else sc.page_dtype
         return TransformerLM.init_cache(
-            sc.cfg, b, sc.capacity, sc.dtype, layout="paged",
-            block_size=sc.block_size, num_blocks=sc.pool_blocks(global_batch))
+            sc.cfg, b, sc.capacity, dt, layout="paged",
+            block_size=sc.block_size, num_blocks=sc.pool_blocks(global_batch),
+            kv_quant=sc.kv_quant)
     model = {"lm": TransformerLM, "vlm": VLM, "encdec": EncDecLM}[sc.kind]
     return model.init_cache(sc.cfg, b, sc.capacity, sc.dtype)
 

@@ -41,6 +41,8 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant as quantlib
+
 
 class PoolError(RuntimeError):
     """Misuse of the pool API (double alloc / double free / unknown client)."""
@@ -525,11 +527,29 @@ class ShardedKVPool:
 # ===========================================================================
 
 def init_pages(num_blocks: int, block_size: int, n_kv_heads: int,
-               head_dim: int, dtype):
-    """Pages for ONE attention layer + the shared per-slot position map."""
+               head_dim: int, dtype, quant: str | None = None):
+    """Pages for ONE attention layer + the shared per-slot position map.
+
+    quant: 'int8' / 'fp8' stores the pages in that dtype with per-(slot,
+    kv-head) fp32 scales alongside (``ksc``/``vsc``, shape (P, BS, Hkv)).
+    The presence of the ``ksc`` key is what marks a cache as quantized
+    downstream (paged_write quantizes at write, the Pallas kernels fuse
+    the dequant into their page loads).
+    """
+    if quant is None:
+        return {
+            "kp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                            dtype),
+            "vp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                            dtype),
+            "ppos": jnp.full((num_blocks, block_size), -1, jnp.int32),
+        }
+    store = quantlib.kv_store_dtype(quant)
     return {
-        "kp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
-        "vp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), dtype),
+        "kp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), store),
+        "vp": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim), store),
+        "ksc": jnp.zeros((num_blocks, block_size, n_kv_heads), jnp.float32),
+        "vsc": jnp.zeros((num_blocks, block_size, n_kv_heads), jnp.float32),
         "ppos": jnp.full((num_blocks, block_size), -1, jnp.int32),
     }
 
@@ -560,9 +580,24 @@ def paged_write(cache, k, v, positions, block_tables=None, trash=None):
     page = jnp.where(valid, page, t)
     slot = jnp.where(valid, positions % bs, 0)
     stored = jnp.where(valid, positions, -1)
+    if "ksc" in cache:
+        # Quantize-at-write: the pool only ever holds low-precision
+        # payloads + per-(slot, head) scales.  Per-vector scaling keeps
+        # writes append-only — no neighbour slot is requantized.
+        kind = quantlib.kv_quant_kind(cache["kp"].dtype)
+        kq, ks = quantlib.quantize_kv(k, kind)               # (B,L,H,D)/(B,L,H)
+        vq, vs = quantlib.quantize_kv(v, kind)
+        return {**cache,
+                "kp": cache["kp"].at[page, slot].set(kq),
+                "vp": cache["vp"].at[page, slot].set(vq),
+                "ksc": cache["ksc"].at[page, slot].set(ks),
+                "vsc": cache["vsc"].at[page, slot].set(vs),
+                "ppos": cache["ppos"].at[page, slot].set(stored)}
     return {**cache,
-            "kp": cache["kp"].at[page, slot].set(k),
-            "vp": cache["vp"].at[page, slot].set(v),
+            "kp": cache["kp"].at[page, slot].set(
+                k.astype(cache["kp"].dtype)),
+            "vp": cache["vp"].at[page, slot].set(
+                v.astype(cache["vp"].dtype)),
             "ppos": cache["ppos"].at[page, slot].set(stored)}
 
 
@@ -574,8 +609,12 @@ def paged_view(cache):
     bt = cache["bt"]
     b, mb = bt.shape
     btc = jnp.maximum(bt, 0)
-    k = cache["kp"][btc]                                     # (B, MB, BS, H, D)
-    v = cache["vp"][btc]
+    if "ksc" in cache:
+        k = quantlib.dequantize_kv(cache["kp"][btc], cache["ksc"][btc])
+        v = quantlib.dequantize_kv(cache["vp"][btc], cache["vsc"][btc])
+    else:
+        k = cache["kp"][btc]                                 # (B, MB, BS, H, D)
+        v = cache["vp"][btc]
     pos = jnp.where(bt[..., None] >= 0, cache["ppos"][btc], -1)
     return (k.reshape(b, -1, *k.shape[3:]),
             v.reshape(b, -1, *v.shape[3:]),

@@ -29,9 +29,9 @@ Snapshot format (``checkpoint.manager`` layout; DESIGN.md §fault
 tolerance):
 
     tree     = {"cache": <paged cache pytree>}       # .npy leaves
-    metadata = {"format": "mux-serve-v1",
+    metadata = {"format": "mux-serve-v2",
                 "config":  {n_mux, rows, capacity, block_size,
-                            num_blocks, n_shards, lane, chunk},
+                            num_blocks, n_shards, lane, chunk, kv_dtype},
                 "pool":    ShardedKVPool/KVPool.dump_state(),
                 "queue":   [request...], "slots": [[slot|null, ...]...],
                 "prefill_progress": {row: [filled, total]},
@@ -59,7 +59,7 @@ from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import StreamSlot
 from repro.serve.telemetry import NULL_TELEMETRY
 
-SNAPSHOT_FORMAT = "mux-serve-v1"
+SNAPSHOT_FORMAT = "mux-serve-v2"
 
 
 # ---------------------------------------------------------------- requests
@@ -91,7 +91,12 @@ def _config_of(rt) -> dict:
             "capacity": rt.sc.capacity, "block_size": rt.sc.block_size,
             "num_blocks": rt.pool.num_blocks,
             "n_shards": rt.sc.n_shards, "lane": rt.lane,
-            "chunk": rt.chunk}
+            "chunk": rt.chunk,
+            # v2: page storage dtype — quantized pages + their ksc/vsc
+            # scales ride the cache tree, and a snapshot written with one
+            # kv_dtype must not restore into a pool of another (the page
+            # payloads would be misinterpreted)
+            "kv_dtype": rt.sc.kv_dtype}
 
 
 def snapshot_state(rt):

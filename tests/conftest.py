@@ -15,6 +15,25 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import gc  # noqa: E402
+
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jax_caches_per_module():
+    """Unmap compiled executables between test modules.
+
+    Every jitted program the suite compiles stays cached (and mapped)
+    for the life of the pytest process; across the full suite that
+    accumulates tens of thousands of mappings and crosses the kernel's
+    ``vm.max_map_count`` default (65530), at which point LLVM segfaults
+    on a failed mmap inside an unrelated late-suite compile.  Clearing
+    per module trades a few re-traces for a bounded mapping count.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()

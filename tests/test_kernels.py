@@ -105,6 +105,150 @@ def test_rwkv6(b, l, h, d, chunk):
                                atol=5e-4, rtol=1e-3)
 
 
+# ==================================================================
+# fused decode entry/exit (mux-embed prologue, demux-RSA epilogue)
+# ==================================================================
+
+from repro.kernels.mux_embed import mux_embed_combine
+
+
+@pytest.mark.parametrize("n,t,d,vocab", [(2, 16, 128, 64), (4, 33, 96, 50),
+                                         (8, 7, 512, 32)])
+@pytest.mark.parametrize("scale", [1.0, 11.3137])
+def test_mux_embed_combine(n, t, d, vocab, scale):
+    """Fused embed-gather + embedding-scale + Gaussian mux-combine vs
+    the oracle (one launch; the (N, T, D) embeds never materialize)."""
+    emb = rand((vocab, d), 1)
+    v = rand((n, d), 2)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 3), (n, t),
+                                0, vocab)
+    got = mux_embed_combine(tokens, emb, v, scale=scale, block_d=64,
+                            interpret=True)
+    want = ref.mux_embed_ref(tokens, emb, v, scale=scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("entry", [None, "rms", "ln"])
+@pytest.mark.parametrize("fuse_exit", [False, True])
+def test_demux_rsa_fused_epilogue(entry, fuse_exit):
+    """Entry-norm + demux MLP + exit-LN fusion vs the composition of the
+    unfused references, at every gate combination."""
+    n, t, d, f = 3, 24, 48, 96
+    h = rand((t, d), 1)
+    k = rand((n, d), 2)
+    w1h, w1k = rand((d, f), 3, scale=0.2), rand((d, f), 4, scale=0.2)
+    b1 = rand((f,), 5, scale=0.2)
+    w2, b2 = rand((f, d), 6, scale=0.2), rand((d,), 7, scale=0.2)
+    kw = {}
+    if entry:
+        kw["entry_kind"] = entry
+        kw["entry_scale"] = rand((d,), 8, scale=0.1) + 1.0
+        if entry == "ln":
+            kw["entry_bias"] = rand((d,), 9, scale=0.1)
+    if fuse_exit:
+        kw["exit_scale"] = rand((d,), 10, scale=0.1) + 1.0
+        kw["exit_bias"] = rand((d,), 11, scale=0.1)
+    got = demux_rsa(h, k, w1h, w1k, b1, w2, b2, block_t=16, block_f=64,
+                    interpret=True, **kw)
+    want = ref.demux_rsa_fused_ref(h, k, w1h, w1k, b1, w2, b2, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def _decode_setup(n, *, kv_quant=None):
+    """A reduced-model paged decode step at mux width n: params, an
+    allocated one-block-per-row cache, one token per instance."""
+    from repro.configs import get_config
+    from repro.core import MuxSpec
+    from repro.models import TransformerLM
+    from repro.serve.engine import set_block_tables
+    cfg = get_config("qwen2-1.5b", reduced=True)
+    mux = MuxSpec(n=n, mux_kind="gaussian", demux_kind="rsa")
+    params = TransformerLM.init(KEY, cfg, mux)
+    b = 2
+    cache = TransformerLM.init_cache(cfg, b, 16, jnp.float32,
+                                     layout="paged", block_size=4,
+                                     num_blocks=2 * b + 1,
+                                     kv_quant=kv_quant)
+    bt = np.full((b, 4), -1, np.int32)
+    for r in range(b):
+        bt[r, 0] = 1 + r
+    cache = set_block_tables(cache, bt)
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 4), (n * b, 1),
+                                4, cfg.vocab_size)
+    return cfg, mux, params, cache, tokens, jnp.zeros((b,), jnp.int32)
+
+
+def test_model_fused_decode_matches_unfused():
+    """TransformerLM decode with the fused entry/exit kernels vs the
+    module path (embed+combine / final-norm+demux), same cache: logits
+    agree and greedy choices are identical."""
+    from repro.models import TransformerLM
+    cfg, mux, params, cache, tokens, qo = _decode_setup(2)
+
+    def run(use_kernels):
+        out = TransformerLM.apply(params, cfg, tokens, mux=mux,
+                                  cache=cache, q_offset=qo,
+                                  dtype=jnp.float32,
+                                  use_kernels=use_kernels)
+        return out["logits"]
+
+    fused, unfused = run(True), run(False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(fused.argmax(-1)),
+                                  np.asarray(unfused.argmax(-1)))
+
+
+# ----------------------------------------------- trace assertion
+
+def _jaxprs_of(v):
+    import jax.extend.core as jcore
+    if isinstance(v, jcore.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jcore.Jaxpr):
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _jaxprs_of(x)
+
+
+def _count_pallas(jaxpr, mult=1):
+    """pallas_call launches in one traced step, scan-multiplied."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += mult
+            continue
+        sub_mult = mult
+        if name == "scan":
+            sub_mult = mult * eqn.params["length"]
+        for v in eqn.params.values():
+            for j in _jaxprs_of(v):
+                total += _count_pallas(j, sub_mult)
+    return total
+
+
+@pytest.mark.parametrize("n,extra", [(1, 0), (2, 2)])
+def test_decode_is_one_launch_per_layer(n, extra):
+    """The fusion acceptance criterion, trace-asserted: a quantized-page
+    decode step lowers to exactly n_layers pallas launches (one fused
+    attention kernel per layer), plus — at mux widths > 1 — one fused
+    mux-embed entry and one fused demux-RSA exit launch."""
+    from repro.models import TransformerLM
+    cfg, mux, params, cache, tokens, qo = _decode_setup(
+        n, kv_quant="int8")
+    jaxpr = jax.make_jaxpr(
+        lambda p, t, c, q: TransformerLM.apply(
+            p, cfg, t, mux=mux, cache=c, q_offset=q,
+            dtype=jnp.float32, use_kernels=True))(
+                params, tokens, cache, qo)
+    n_layers = len(cfg.block_pattern) * cfg.n_periods + len(cfg.tail_blocks)
+    assert _count_pallas(jaxpr.jaxpr) == n_layers + extra
+
+
 def test_rwkv6_state_chaining():
     """Running two halves with carried state == one full pass."""
     b, l, h, d = 1, 64, 2, 8

@@ -1,0 +1,185 @@
+"""Property tests for the shared symmetric-quantization machinery
+(``core.quant``): round-trip residuals stay inside the analytic
+per-element bounds, scales are monotone/homogeneous in the input
+magnitude, and the degenerate blocks (all-zeros, denormals, huge
+magnitudes) neither NaN nor overflow.
+
+Also pins the ``optim.compression`` error-feedback math bit-identical
+across the refactor that moved ``quantize_int8`` into ``core.quant``:
+``compressed_psum`` is compared against an inline re-implementation of
+its documented formula, elementwise equal at the bit level.
+
+Property variants run under hypothesis when installed and skip cleanly
+otherwise (tests/hypothesis_stub.py); deterministic sweeps always run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from hypothesis_stub import given, settings, st
+
+from repro.core import quant
+
+KEY = jax.random.PRNGKey(0)
+KINDS = [k for k in quant.KV_QUANT_KINDS
+         if k != "fp8" or quant.has_fp8()]
+
+
+def _rand(shape, seed, scale=1.0):
+    return jax.random.normal(jax.random.fold_in(KEY, seed), shape) * scale
+
+
+# ------------------------------------------------------- residual bound
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("seed,mag", [(0, 1.0), (1, 1e-3), (2, 100.0)])
+def test_kv_roundtrip_within_analytic_bound(kind, seed, mag):
+    x = _rand((5, 4, 3, 16), seed, mag)
+    q, s = quant.quantize_kv(x, kind)
+    assert q.dtype == quant.kv_store_dtype(kind)
+    assert s.shape == x.shape[:-1] and s.dtype == jnp.float32
+    err = jnp.abs(quant.dequantize_kv(q, s) - x)
+    bound = quant.kv_error_bound(s, kind)[..., None]
+    assert float(jnp.max(err - bound)) <= 1e-6 * mag
+    # dequantized magnitudes stay inside the analytic value bound
+    vmax = quant.kv_value_bound(s, kind)[..., None]
+    assert float(jnp.max(jnp.abs(quant.dequantize_kv(q, s)) - vmax)) <= 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_kv_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16))
+                    * 10.0 ** rng.integers(-3, 4), jnp.float32)
+    for kind in KINDS:
+        q, s = quant.quantize_kv(x, kind)
+        err = jnp.abs(quant.dequantize_kv(q, s) - x)
+        bound = quant.kv_error_bound(s, kind)[..., None]
+        assert float(jnp.max(err - bound)) <= 1e-6 * float(jnp.max(jnp.abs(x)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_tensor_int8_roundtrip_property(seed):
+    """Per-tensor regime (the gradient-compression payload): residual
+    stays within half a quantum of the shared scale."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(64,)) * 10,
+                    jnp.float32)
+    q, s = quant.quantize_int8(x)
+    err = np.abs(np.asarray(quant.dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6
+
+
+# -------------------------------------------------- scale monotonicity
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_scale_homogeneous_and_monotone(kind):
+    """The per-vector scale is positively homogeneous (scale(c x) =
+    c scale(x)) and monotone in the vector's abs-max."""
+    x = _rand((6, 16), 3)
+    _, s1 = quant.quantize_kv(x, kind)
+    _, s2 = quant.quantize_kv(4.0 * x, kind)
+    np.testing.assert_allclose(np.asarray(s2), 4.0 * np.asarray(s1),
+                               rtol=1e-6)
+    # growing any vector's abs-max never shrinks its scale
+    bumped = x.at[:, 0].set(2.0 * jnp.max(jnp.abs(x), axis=-1))
+    _, s3 = quant.quantize_kv(bumped, kind)
+    assert bool(jnp.all(s3 >= s1))
+
+
+# ------------------------------------------------------ degenerate blocks
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_all_zero_block(kind):
+    """All-zeros vectors must round-trip to exact zeros through the EPS
+    scale floor (no 0/0 NaNs)."""
+    x = jnp.zeros((3, 16), jnp.float32)
+    q, s = quant.quantize_kv(x, kind)
+    assert bool(jnp.all(s > 0))
+    out = quant.dequantize_kv(q, s)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_denormal_block(kind):
+    """Vectors far below the EPS floor: finite payload, zero-or-tiny
+    round-trip, and the analytic bound still holds (the floor dominates
+    the true abs-max)."""
+    x = jnp.full((2, 16), 1e-30, jnp.float32)
+    q, s = quant.quantize_kv(x, kind)
+    out = quant.dequantize_kv(q, s)
+    assert np.isfinite(np.asarray(out)).all()
+    err = jnp.abs(out - x)
+    assert float(jnp.max(err - quant.kv_error_bound(s, kind)[..., None])) <= 0
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_max_magnitude_block(kind):
+    """Huge-magnitude vectors: the payload saturates at the top level
+    (never Inf), and the abs-max element round-trips within bound."""
+    x = _rand((4, 16), 7, 1e30)
+    q, s = quant.quantize_kv(x, kind)
+    deq = quant.dequantize_kv(q, s)
+    assert np.isfinite(np.asarray(deq)).all()
+    levels = quant.INT8_LEVELS if kind == "int8" else quant.FP8_MAX
+    assert float(jnp.max(jnp.abs(q.astype(jnp.float32)))) <= levels
+    err = jnp.abs(deq - x)
+    assert float(jnp.max(err / jnp.max(jnp.abs(x)))) <= (
+        0.5 / quant.INT8_LEVELS if kind == "int8" else quant.FP8_REL) + 1e-7
+
+
+# --------------------------------------------------- dtype plumbing
+
+def test_resolve_kv_dtype_aliases_and_errors():
+    assert quant.resolve_kv_dtype(None) is None
+    for alias, canon in [("fp32", "fp32"), ("float32", "fp32"),
+                         ("BF16", "bf16"), ("int8", "int8")]:
+        assert quant.resolve_kv_dtype(alias) == canon
+    if quant.has_fp8():
+        assert quant.resolve_kv_dtype("e4m3") == "fp8"
+    with pytest.raises(ValueError, match="unknown kv dtype"):
+        quant.resolve_kv_dtype("int4")
+
+
+def test_kv_quant_kind_roundtrips_store_dtype():
+    assert quant.kv_quant_kind(quant.kv_store_dtype("int8")) == "int8"
+    assert quant.kv_quant_kind(jnp.float32) is None
+    assert quant.kv_quant_kind(jnp.bfloat16) is None
+    if quant.has_fp8():
+        assert quant.kv_quant_kind(quant.kv_store_dtype("fp8")) == "fp8"
+
+
+# ----------------------------- compression regression (bit-identical)
+
+def test_compressed_psum_bit_identical_to_documented_formula():
+    """The error-feedback all-reduce must survive the quantizer's move
+    into ``core.quant`` bit-for-bit: compare ``compressed_psum`` under a
+    4-replica vmap against an inline re-implementation of the documented
+    formula (quantize the corrected grad, agree on the pmax scale,
+    requantize, integer-sum, decode; residual = corrected - decoded)."""
+    from repro.optim.compression import compressed_psum
+    n = 4
+    grads = _rand((n, 64, 64), 11)
+    errors = _rand((n, 64, 64), 12, 0.01)
+
+    mean, new_err = jax.vmap(
+        lambda g, e: compressed_psum(g, e, "dp"), axis_name="dp")(
+            grads, errors)
+
+    corrected = grads + errors
+    scales = jnp.max(jnp.abs(corrected), axis=(1, 2))
+    gscale = jnp.max(jnp.maximum(scales, 1e-12) / 127.0)
+    requant = jnp.clip(jnp.round(corrected / gscale), -127, 127)
+    want_mean = (jnp.sum(requant.astype(jnp.int32), axis=0)
+                 .astype(jnp.float32) * gscale / n)
+    want_err = corrected - requant * gscale
+
+    np.testing.assert_array_equal(np.asarray(mean[0]), np.asarray(want_mean))
+    for r in range(n):
+        np.testing.assert_array_equal(np.asarray(new_err[r]),
+                                      np.asarray(want_err[r]))

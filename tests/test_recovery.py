@@ -293,6 +293,74 @@ def test_restore_rejects_mismatched_grid(model, tmp_path):
         restore_state(rt, tree, {"format": "bogus"})
 
 
+# ------------------------------------- quantized pages (format v2)
+
+def _sc_kv(cfg, kv_dtype):
+    return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=1),
+                       capacity=CAPACITY, dtype=jnp.float32,
+                       cache_layout="paged", block_size=BLOCK,
+                       kv_dtype=kv_dtype)
+
+
+def test_snapshot_format_v2_gates_kv_dtype(model, tmp_path):
+    """The format bump: v2 snapshots carry ``kv_dtype`` in their config,
+    pre-bump ('mux-serve-v1') snapshots are rejected outright, and a
+    quantized snapshot must not restore into an unquantized pool (the
+    int8 payloads would be misread as fp32 pages)."""
+    from repro.serve.recovery import SNAPSHOT_FORMAT
+    assert SNAPSHOT_FORMAT == "mux-serve-v2"
+    cfg, params = model
+    rt = ServeRuntime(params, _sc_kv(cfg, "int8"), ROWS, chunk=4)
+    tree, meta = snapshot_state(rt)
+    assert meta["config"]["kv_dtype"] == "int8"
+    with pytest.raises(ValueError, match="not a serve snapshot"):
+        restore_state(rt, tree, {**meta, "format": "mux-serve-v1"})
+    plain = ServeRuntime(params, _sc_kv(cfg, None), ROWS, chunk=4)
+    with pytest.raises(ValueError, match="does not match"):
+        restore_state(plain, tree, meta)
+
+
+def test_snapshot_restore_quantized_pages(model, tmp_path):
+    """Hot restore with int8 pages: the quantized payloads AND their
+    per-slot ksc/vsc scales round-trip through the snapshot, restored
+    rows resume decode with zero re-prefill, and the streams stay
+    token-identical to the undisturbed quantized run."""
+    cfg, params = model
+    sc = lambda: _sc_kv(cfg, "int8")
+    base, _ = _drive(ServeRuntime(params, sc(), ROWS, chunk=4),
+                     _requests(cfg))
+    sup = RecoverySupervisor(ckpt_dir=str(tmp_path))
+    swapped = {}
+
+    def on_step(rt, step):
+        if (not swapped and step >= 4 and not rt.sched.queue
+                and not rt.sched.prefill_progress):
+            sup.snapshot(rt, step)
+            old = rt
+            rt2 = ServeRuntime(params, sc(), ROWS, chunk=4)
+            rt2, _ = sup.restore(rt2)
+            # quantized payloads + scales rode the cache tree
+            cache0 = rt2.cache["periods"][0]
+            assert cache0["kp"].dtype == jnp.int8
+            assert cache0["ksc"].dtype == jnp.float32
+            np.testing.assert_array_equal(
+                np.asarray(cache0["kp"]),
+                np.asarray(old.cache["periods"][0]["kp"]))
+            np.testing.assert_array_equal(
+                np.asarray(cache0["ksc"]),
+                np.asarray(old.cache["periods"][0]["ksc"]))
+            rt2.sched.completed[:0] = old.sched.completed
+            swapped["at"] = step
+            return rt2
+        return rt
+
+    got, rt2 = _drive(ServeRuntime(params, sc(), ROWS, chunk=4),
+                      _requests(cfg), on_step=on_step)
+    assert swapped, "schedule never reached an all-decoding step"
+    assert got == base
+    assert rt2.stats["prefill_events"] == 0
+
+
 # -------------------------------------------------- live lane resize
 
 class FakeLane:

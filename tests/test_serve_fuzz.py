@@ -18,7 +18,12 @@ prompt length, generation budget, pool pressure) are served through:
   * telemetry       — paged-chunked with a live ``serve.telemetry``
                       session: token- and compile-count-identical to
                       the uninstrumented run (observability must add
-                      no host syncs and no jit inputs).
+                      no host syncs and no jit inputs);
+  * quantized KV    — paged-chunked with int8 pages + fused-dequant
+                      kernels (``ServeConfig(kv_dtype='int8')``): same
+                      churn schedules as the bf16-page arm, greedy
+                      agreement >= 99% of generated tokens, compile
+                      counts unchanged (quantization adds no buckets).
 
 All paged arms must emit token-identical greedy streams per request, and
 each stream must equal its solo ``greedy_generate`` output.  The ring
@@ -271,6 +276,44 @@ def _fuzz_restart_once(cfg, params, seed, ckpt_dir):
     stats["pool"].check_invariants()
 
 
+def _paged_sc_kv(cfg, kv_dtype):
+    return ServeConfig(cfg=cfg, kind="lm", mux=MuxSpec(n=1),
+                       capacity=CAPACITY, dtype=jnp.float32,
+                       cache_layout="paged", block_size=BLOCK,
+                       kv_dtype=kv_dtype)
+
+
+def _fuzz_quantized_once(cfg, params, seed):
+    """Quantized-KV arm (DESIGN.md §quantized pages): int8 pages with the
+    fused-dequant kernels, same churn schedule as the bf16-page arm.
+    Greedy agreement >= 99% of generated tokens (quantization noise may
+    flip a rare near-tie, never the stream shape) and compile counts
+    unchanged — the quantized pool adds no jit inputs and no buckets."""
+    arrivals = _schedule(cfg, seed)
+
+    def arm(kv_dtype):
+        stats = run_continuous(params, _paged_sc_kv(cfg, kv_dtype), ROWS,
+                               [(t, p.copy(), m) for t, p, m in arrivals],
+                               chunk=4, use_kernels=True)
+        tokens = {r.uid: (tuple(r.prompt), list(r.output))
+                  for r in stats["completed"]}
+        assert len(tokens) == len(arrivals), f"{kv_dtype} arm dropped"
+        assert stats["pool"].n_used_blocks == 0
+        return tokens, dict(stats["trace_counts"])
+
+    base_tokens, base_traces = arm("bf16")
+    q_tokens, q_traces = arm("int8")
+    assert q_traces == base_traces, "quantization changed compile counts"
+    total = agree = 0
+    for uid, (prompt, out) in base_tokens.items():
+        q_prompt, q_out = q_tokens[uid]
+        assert q_prompt == prompt and len(q_out) == len(out)
+        total += len(out)
+        agree += sum(int(a == b) for a, b in zip(out, q_out))
+    assert total and agree / total >= 0.99, (
+        f"int8 greedy agreement {agree}/{total} below 99%")
+
+
 LANE_WIDTHS = (1, 4, 8)
 
 
@@ -416,6 +459,12 @@ def test_fuzz_lane_resize_deterministic(lane_models):
     _fuzz_lane_resize_once(cfg, params_by_width, 0)
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_quantized_kv_deterministic(model, seed):
+    cfg, params = model
+    _fuzz_quantized_once(cfg, params, seed)
+
+
 # ------------------------------------------------- hypothesis variants
 
 @settings(max_examples=5, deadline=None)
@@ -430,3 +479,10 @@ def test_fuzz_churn_property(model, seed):
 def test_fuzz_pool_pressure_property(model, seed):
     cfg, params = model
     _fuzz_pressure_once(cfg, params, seed)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fuzz_quantized_kv_property(model, seed):
+    cfg, params = model
+    _fuzz_quantized_once(cfg, params, seed)
