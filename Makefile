@@ -24,7 +24,8 @@ bench-json:                ## bench-smoke + persisted perf trajectory row
 	$(PY) -m benchmarks.serve_churn --smoke \
 	    --json BENCH_serve_churn.json \
 	    --metrics-out BENCH_serve_metrics.json \
-	    --trace-out BENCH_serve_trace.json
+	    --trace-out BENCH_serve_trace.json \
+	    --disagg-trace-out BENCH_serve_disagg_trace.json
 
 serve-smoke:               ## continuous paged serving end-to-end
 	$(PY) -m repro.launch.serve --continuous --cache paged \

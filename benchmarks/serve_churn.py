@@ -36,7 +36,17 @@ the identical trace:
                          ``recovery_latency_s``;
   * ``lanes``          — width-lane serving (DESIGN.md §width lanes):
                          one runtime per width in ``--lanes``, requests
-                         routed by SLO class + live lane load.
+                         routed by SLO class + live lane load;
+  * ``disagg``         — disaggregated prefill/decode lanes (DESIGN.md
+                         §disaggregated serving): a prefill-only lane
+                         hands each finished row's KV pages to a
+                         same-width decode-only lane (bit-exact
+                         migration, zero re-prefill), handoff placement
+                         goodput-ordered; read against
+                         ``paged-chunked``, the interleaved grid on the
+                         same trace.  JSON adds ``handoffs`` /
+                         ``handoff_streams`` / ``migrated_kv_bytes``
+                         plus one ``disagg/<role>`` row per lane.
 
 Reported per arm (CSV: ``serve_churn,<arm>,...``; the ``lanes`` arm adds
 one ``serve_churn,lanes/N<w>,...`` row per lane):
@@ -72,7 +82,9 @@ one ``serve_churn,lanes/N<w>,...`` row per lane):
 breakdown and routing counters) as JSON for trajectory tooling;
 ``--metrics-out`` / ``--trace-out`` attach a ``serve.telemetry``
 session to the lanes arm and persist its metrics snapshot (+ ``.prom``
-sibling) and Perfetto-loadable step-span trace.
+sibling) and Perfetto-loadable step-span trace;
+``--disagg-trace-out`` does the same for the disagg arm, whose
+timeline carries the KV-page handoff spans and instants.
 
 Runnable in reduced mode on CPU:
 
@@ -92,7 +104,7 @@ from repro.core import MuxSpec
 from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig
-from repro.serve.router import SLO_CLASSES, ttft_attainment
+from repro.serve.router import LaneSpec, SLO_CLASSES, ttft_attainment
 from repro.serve.telemetry import Telemetry
 from repro.launch.serve import run_continuous
 
@@ -202,7 +214,7 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
         n_requests=10, arrival_every=2.0, seed=0, block_size=8,
         chunk=8, prompt=(6, 16), new=(3, 10), lanes=(1, 2, 4),
         kv_dtype="int8", json_path=None, metrics_out=None,
-        trace_out=None):
+        trace_out=None, disagg_trace_out=None):
     cfg = get_config(arch, reduced=True)
     widths = sorted(set((mux_n,) + tuple(lanes)))
     # one trained model per mux width (MUX-PLMs are width-specific)
@@ -346,6 +358,50 @@ def run(budget=None, *, arch="qwen2-1.5b", mux_n=2, rows=2,
                 telemetry.write_trace(trace_out)
                 print(f"serve_churn wrote {trace_out}")
 
+    # disaggregated arm (DESIGN.md §disaggregated serving): a prefill
+    # lane streams each finished row's KV pages to a same-width decode
+    # lane — zero re-prefill, goodput-ordered handoff placement.  The
+    # paged-chunked arm above is the interleaved baseline on this trace.
+    disagg = (LaneSpec(n_mux=mux_n, rows=rows, chunk=chunk,
+                       role="prefill"),
+              LaneSpec(n_mux=mux_n, rows=rows, chunk=chunk,
+                       role="decode"))
+    disagg_tel = Telemetry() if disagg_trace_out else None
+    stats = run_continuous(params, sc_for(mux_n, "paged"), rows,
+                           trace_for(), chunk=chunk, lanes=disagg,
+                           route="goodput", telemetry=disagg_tel)
+    assert len(stats["completed"]) == n_requests
+    # zero re-prefill, measured: decode lanes never run a prefill step
+    assert all(ls["prefill_events"] == 0 for ls in stats["lanes"]
+               if ls["role"] == "decode")
+    rec = stats["recovery"]
+    row = _row("disagg", mux_n, stats, stats["completed"],
+               sc=sc_for(mux_n, "paged"), rows=rows)
+    row["route"] = "goodput"
+    row["handoffs"] = rec["handoffs"]
+    row["handoff_streams"] = rec["handoff_streams"]
+    row["migrated_kv_bytes"] = rec["migrated_kv_bytes"]
+    row["lanes"] = []
+    for ls in stats["lanes"]:
+        lane_row = _row(f"disagg/{ls['role']}", ls["n_mux"], ls,
+                        ls["completed"], wall=stats["wall"],
+                        sc=sc_for(ls["n_mux"], "paged"), rows=ls["rows"])
+        lane_row["lane"] = ls["lane"]
+        lane_row["role"] = ls["role"]
+        lane_row["handoffs_out"] = ls["handoffs_out"]
+        lane_row["handoffs_in"] = ls["handoffs_in"]
+        lane_row["migrated_bytes"] = ls["migrated_bytes"]
+        row["lanes"].append(lane_row)
+    results.append(row)
+    _csv(row)
+    for lane_row in row["lanes"]:
+        _csv(lane_row)
+    if disagg_tel is not None:
+        # the disagg arm's step-span trace: handoff spans + instants on
+        # the lane timelines (CI uploads it next to the lanes trace)
+        disagg_tel.write_trace(disagg_trace_out)
+        print(f"serve_churn wrote {disagg_trace_out}")
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
@@ -380,6 +436,9 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the lanes arm's step-span trace as "
                          "Chrome trace-event JSON (ui.perfetto.dev)")
+    ap.add_argument("--disagg-trace-out", default=None, metavar="PATH",
+                    help="write the disagg arm's step-span trace — "
+                         "handoff spans/instants on the lane timelines")
     args = ap.parse_args()
     lanes = (tuple(int(x) for x in args.lanes.split(","))
              if args.lanes else ())
@@ -388,7 +447,8 @@ def main():
     run(arch=args.arch, mux_n=args.mux_n, rows=args.rows, n_requests=n,
         chunk=args.chunk, seed=args.seed, lanes=lanes,
         kv_dtype=args.kv_dtype, json_path=args.json,
-        metrics_out=args.metrics_out, trace_out=args.trace_out)
+        metrics_out=args.metrics_out, trace_out=args.trace_out,
+        disagg_trace_out=args.disagg_trace_out)
     print(f"serve_churn done in {time.time() - t0:.0f}s")
 
 

@@ -135,7 +135,8 @@ def _lane_event(ev, router, sup, params_by_width, sc, backbone_rows,
 def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
                arrivals, lanes, *, pad_id, on_prefill, chunk, prefill_mode,
                default_sampling, mesh, use_kernels, pool_budget,
-               spill_queue, telemetry, events=None, ckpt_dir=None):
+               spill_queue, telemetry, events=None, ckpt_dir=None,
+               route="load", fence_stragglers=False):
     """Width-lane serve loop (DESIGN.md §width lanes): one ``ServeRuntime``
     per lane at that lane's mux width, ``LaneRouter`` admitting each
     arrival by SLO class + live lane load, all lanes stepping in lockstep
@@ -148,6 +149,15 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
     width (asserted via ``check_compile_once`` before returning), and
     backpressure (rollback / preemption) confined to the lane's own pool
     partition.
+
+    Disaggregated roles (DESIGN.md §disaggregated): lanes whose
+    ``LaneSpec.role`` is ``"prefill"``/``"decode"`` split the two serve
+    phases across dedicated runtimes.  After every lockstep step the
+    loop runs a handoff pass: each prefill lane's finished rows migrate
+    (KV pages + sampled next token, no re-prefill) onto a free row of a
+    same-width decode lane picked by ``router.handoff_targets``;
+    requests a decode lane bounced back (preemption, shard-loss replay)
+    drain through the router to a prefill-capable lane.
     """
     specs = [s if isinstance(s, LaneSpec)
              else LaneSpec(n_mux=int(s), rows=backbone_rows, chunk=chunk)
@@ -164,10 +174,23 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
             chunk=None if prefill_mode == "blocking" else spec.chunk,
             pad_id=pad_id, default_sampling=default_sampling,
             on_prefill=on_prefill, mesh=mesh, use_kernels=use_kernels,
-            lane=idx, telemetry=telemetry))
+            lane=idx, telemetry=telemetry, role=spec.role))
+    disagg = any(rt.role != "both" for rt in runtimes)
+    for rt in runtimes:
+        # a prefill lane with nowhere to hand off would park finished
+        # rows forever — fail at construction, not mid-traffic
+        if rt.role == "prefill" and not any(
+                d.role != "prefill" and d.n_mux == rt.n_mux
+                for d in runtimes):
+            raise ValueError(
+                f"prefill lane at width {rt.n_mux} has no same-width "
+                f"decode-capable lane to hand off to")
     router = LaneRouter(runtimes, budget=pool_budget,
-                        spill_queue=spill_queue, telemetry=telemetry)
+                        spill_queue=spill_queue, telemetry=telemetry,
+                        mode=route)
     sup = RecoverySupervisor(ckpt_dir=ckpt_dir, telemetry=telemetry)
+    if fence_stragglers:
+        sup.enable_straggler_fencing()
     pending = collections.deque(
         sorted(events or [], key=lambda e: e["step"]))
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
@@ -182,6 +205,19 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
                         default_sampling=default_sampling,
                         on_prefill=on_prefill, mesh=mesh,
                         use_kernels=use_kernels, telemetry=telemetry)
+        if disagg:
+            # requests a decode lane bounced back into its own queue
+            # (preemption rollback, shard-loss replay) cannot prefill
+            # there — drain them through the router to a
+            # prefill-capable lane before this step's admissions
+            for rt in router.runtimes:
+                if rt.role != "decode":
+                    continue
+                while rt.sched.queue:
+                    r = rt.sched.queue.popleft()
+                    i = router.route(r)
+                    r.routed_step = step
+                    router.runtimes[i].submit(r)
         while arrivals and arrivals[0][0] <= step:
             a = arrivals.popleft()
             r = Request(uid=uid, prompt=list(a[1]), max_new=a[2],
@@ -196,7 +232,36 @@ def _run_lanes(params_by_width, sc: ServeConfig, backbone_rows: int,
         # admissions land before wider lanes draw on freshly rebalanced
         # quota (recomputed per step — resize changes the lane set)
         for rt in sorted(router.runtimes, key=lambda rt: rt.n_mux):
+            t_step = time.time()
             rt.step()
+            if sup.fencing_enabled and rt.sc.n_shards >= 2:
+                dt = time.time() - t_step
+                sup.observe_shard_times(rt, {
+                    s: dt for s in range(rt.sc.n_shards)
+                    if s not in rt.sched.dead_shards})
+        if disagg:
+            # handoff pass: stream each prefill lane's finished rows to
+            # a free row of a same-width decode lane — KV pages migrate
+            # across pool partitions, the row's streams keep decoding
+            # from their already-sampled next token (zero re-prefill)
+            for rt in router.runtimes:
+                if rt.role != "prefill":
+                    continue
+                for j in rt.handoff_ready():
+                    for i in router.handoff_targets(rt.n_mux):
+                        dst = router.runtimes[i]
+                        rows = dst.free_rows()
+                        if not rows:
+                            continue
+                        before = rt.stats["migrated_bytes"]
+                        plan = rt.handoff_to(dst, j, rows[0])
+                        if plan is not None:
+                            sup.note_handoff(
+                                plan, rt.stats["migrated_bytes"] - before)
+                            break
+                    # no target had a free row: the row parks on the
+                    # prefill lane and retries next step (backpressure,
+                    # not an error)
         sup.note_step()
         sup.pop_drained(router)
         step += 1
@@ -244,7 +309,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                    prefill_mode: str = "chunked", default_sampling=None,
                    mesh=None, use_kernels: bool = False, lanes=None,
                    pool_budget=None, spill_queue=None, telemetry=None,
-                   events=None, ckpt_dir=None):
+                   events=None, ckpt_dir=None, route: str = "load",
+                   fence_stragglers: bool = False):
     """Continuous-batching serve loop for both cache layouts.
 
     arrivals: iterable of (step, prompt_tokens, max_new[, SamplingParams
@@ -285,6 +351,16 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
     (``engine.lane_config`` derives each lane's).  pool_budget /
     spill_queue are forwarded to the router.
 
+    Disaggregated serving (DESIGN.md §disaggregated): ``LaneSpec``s
+    with ``role="prefill"``/``role="decode"`` dedicate lanes to one
+    phase — finished prefill rows migrate their KV pages onto a
+    same-width decode lane without re-prefill.  route: ``"load"``
+    (default) routes on live lane load; ``"goodput"`` stable-sorts
+    admission and handoff targets on each lane's published goodput
+    (TTFT-SLO attainment × tok/s).  fence_stragglers: arm per-shard
+    step-time ``StragglerDetector``s — a shard flagged alone is fenced
+    via the shard-loss replay path before it fails outright.
+
     Prefill accounting (consistent across arms — DESIGN.md):
       * ``prefill_tokens``          — backbone token-positions processed
                                       (per-row tokens × rows touched);
@@ -318,7 +394,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                           default_sampling=default_sampling, mesh=mesh,
                           use_kernels=use_kernels, pool_budget=pool_budget,
                           spill_queue=spill_queue, telemetry=telemetry,
-                          events=events, ckpt_dir=ckpt_dir)
+                          events=events, ckpt_dir=ckpt_dir, route=route,
+                          fence_stragglers=fence_stragglers)
     if events and sc.cache_layout != "paged":
         raise ValueError("failure/resize events require the paged layout")
     arrivals = collections.deque(sorted(arrivals, key=lambda a: a[0]))
@@ -345,6 +422,8 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
 
         rt = make_rt()
         sup = RecoverySupervisor(ckpt_dir=ckpt_dir, telemetry=telemetry)
+        if fence_stragglers:
+            sup.enable_straggler_fencing()
         pending = collections.deque(
             sorted(events or [], key=lambda e: e["step"]))
         step = 0
@@ -371,7 +450,13 @@ def run_continuous(params, sc: ServeConfig, backbone_rows: int, arrivals,
                     raise ValueError(f"unknown serve event op "
                                      f"{ev['op']!r}")
             _pop_arrivals(step, rt.submit)
+            t_step = time.time()
             rt.step()
+            if sup.fencing_enabled and sc.n_shards >= 2:
+                dt = time.time() - t_step
+                sup.observe_shard_times(rt, {
+                    s: dt for s in range(sc.n_shards)
+                    if s not in rt.sched.dead_shards})
             sup.note_step()
             step += 1
             telemetry.maybe_snapshot(step)
@@ -580,6 +665,32 @@ def main(argv=None):
     ap.add_argument("--lane-rows", default=None, metavar="R1,R2,...",
                     help="backbone rows per lane (default: "
                          "--backbone-batch for every lane)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving (DESIGN.md "
+                         "§disaggregated): dedicated prefill and decode "
+                         "lanes (--prefill-lanes/--decode-lanes); "
+                         "finished prefill rows migrate their KV pages "
+                         "to a same-width decode lane with no "
+                         "re-prefill; requires --continuous "
+                         "--cache paged")
+    ap.add_argument("--prefill-lanes", default=None, metavar="N1,N2,...",
+                    help="--disagg: mux widths of the prefill-only "
+                         "lanes (each width needs a same-width entry "
+                         "in --decode-lanes)")
+    ap.add_argument("--decode-lanes", default=None, metavar="N1,N2,...",
+                    help="--disagg: mux widths of the decode-only lanes")
+    ap.add_argument("--route", choices=("load", "goodput"),
+                    default="load",
+                    help="lane routing signal: live lane load "
+                         "(default) or published per-lane goodput "
+                         "(TTFT-SLO attainment × tok/s) for admission "
+                         "and handoff-target choice")
+    ap.add_argument("--fence-stragglers", action="store_true",
+                    help="paged continuous: arm per-shard step-time "
+                         "straggler detectors — a shard flagged alone "
+                         "is fenced via the shard-loss replay path "
+                         "before it fails outright (needs >= 2 data "
+                         "shards)")
     ap.add_argument("--slo-mix", default="balanced=1",
                     help="SLO-class mix of the synthetic trace, e.g. "
                          "latency=0.25,balanced=0.5,throughput=0.25")
@@ -708,22 +819,49 @@ def main(argv=None):
     if (args.drain_lane or args.add_lane) and args.lanes is None:
         ap.error("--drain-lane/--add-lane require --lanes")
 
-    lanes = slo_mix = None
-    if args.lanes is not None:
-        if not (args.continuous and args.cache == "paged"):
-            ap.error("--lanes requires --continuous --cache paged")
+    def _widths(spec, flag):
         try:
-            widths = [int(x) for x in args.lanes.split(",")]
+            return [int(x) for x in spec.split(",")]
         except ValueError:
-            ap.error("--lanes expects comma-separated widths, e.g. 1,4,8")
+            ap.error(f"{flag} expects comma-separated widths, e.g. 1,4,8")
+
+    if args.disagg:
+        if args.lanes is not None:
+            ap.error("--disagg replaces --lanes "
+                     "(use --prefill-lanes/--decode-lanes)")
+        if not (args.prefill_lanes and args.decode_lanes):
+            ap.error("--disagg requires --prefill-lanes and "
+                     "--decode-lanes")
+        if args.prefill == "blocking":
+            ap.error("--disagg requires chunked prefill "
+                     "(drop --prefill blocking)")
+    elif args.prefill_lanes or args.decode_lanes:
+        ap.error("--prefill-lanes/--decode-lanes require --disagg")
+
+    lanes = slo_mix = None
+    if args.lanes is not None or args.disagg:
+        if not (args.continuous and args.cache == "paged"):
+            ap.error("--lanes/--disagg require --continuous --cache paged")
+        if args.disagg:
+            pw = _widths(args.prefill_lanes, "--prefill-lanes")
+            dw = _widths(args.decode_lanes, "--decode-lanes")
+            missing = sorted(set(pw) - set(dw))
+            if missing:
+                ap.error(f"--disagg: prefill widths {missing} have no "
+                         f"same-width decode lane")
+            widths = pw + dw
+            roles = ["prefill"] * len(pw) + ["decode"] * len(dw)
+        else:
+            widths = _widths(args.lanes, "--lanes")
+            roles = ["both"] * len(widths)
         lane_rows = ([int(x) for x in args.lane_rows.split(",")]
                      if args.lane_rows
                      else [args.backbone_batch] * len(widths))
         if len(lane_rows) != len(widths):
             ap.error(f"--lane-rows gives {len(lane_rows)} entries for "
                      f"{len(widths)} lanes")
-        lanes = [LaneSpec(n_mux=w, rows=r, chunk=args.chunk)
-                 for w, r in zip(widths, lane_rows)]
+        lanes = [LaneSpec(n_mux=w, rows=r, chunk=args.chunk, role=ro)
+                 for w, r, ro in zip(widths, lane_rows, roles)]
         slo_mix = _parse_slo_mix(ap, args.slo_mix)
         # one trained model per mux width (MUX-PLMs are width-specific),
         # including widths that only join later via --add-lane
@@ -754,6 +892,15 @@ def main(argv=None):
     if args.kill_shard and n_shards < 2:
         ap.error("--kill-shard needs >= 2 data shards "
                  "(set --shards N or --mesh DATA,MODEL)")
+    if args.fence_stragglers:
+        if not (args.continuous and args.cache == "paged"):
+            ap.error("--fence-stragglers requires --continuous "
+                     "--cache paged")
+        if n_shards < 2:
+            ap.error("--fence-stragglers needs >= 2 data shards "
+                     "(set --shards N or --mesh DATA,MODEL)")
+    if args.route == "goodput" and lanes is None:
+        ap.error("--route goodput requires --lanes or --disagg")
     if args.kv_dtype and not (args.continuous and args.cache == "paged"):
         ap.error("--kv-dtype requires --continuous --cache paged")
     sc = ServeConfig(cfg=cfg, kind=kind, mux=mux,
@@ -800,7 +947,8 @@ def main(argv=None):
                            use_kernels=args.use_kernels, lanes=lanes,
                            pool_budget=args.pool_budget,
                            telemetry=telemetry, events=events or None,
-                           ckpt_dir=args.ckpt_dir)
+                           ckpt_dir=args.ckpt_dir, route=args.route,
+                           fence_stragglers=args.fence_stragglers)
     done = len(stats["completed"])
     util = float(np.mean(stats["slot_util"])) if stats["slot_util"] else 0.0
     # report the mode that actually ran (the runtime falls back to
@@ -809,9 +957,13 @@ def main(argv=None):
             else "ring")
     if mesh is not None:
         mode += f"/mesh{tuple(mesh.devices.shape)}"
+    lanes_desc = None
     if lanes is not None:
-        mode += f"/lanes[{args.lanes}]"
-    width = (f"widths {args.lanes}" if lanes is not None
+        lanes_desc = (f"P:{args.prefill_lanes}>D:{args.decode_lanes}"
+                      if args.disagg else args.lanes)
+        mode += (f"/disagg[{lanes_desc}]" if args.disagg
+                 else f"/lanes[{lanes_desc}]")
+    width = (f"widths {lanes_desc}" if lanes is not None
              else f"mux N={mux.n}")
     print(f"continuous[{mode}] served {done} requests "
           f"({stats['generated_tokens']} tokens) in {stats['wall']:.1f}s  "
@@ -833,9 +985,16 @@ def main(argv=None):
                   f"compiled [{compiled}]")
         rc = stats["routing"]
         routed = ", ".join(f"{k}={v}" for k, v in rc["routed"].items())
-        print(f"routing: {routed}; demotions={rc['demotions']}, "
+        print(f"routing[{args.route}]: {routed}; "
+              f"demotions={rc['demotions']}, "
               f"promotions={rc['promotions']}, "
               f"rebalanced={rc['rebalanced_blocks']} blocks")
+        if args.disagg:
+            drec = stats["recovery"]
+            print(f"disagg: {drec['handoffs']} handoffs "
+                  f"({drec['handoff_streams']} streams, "
+                  f"{drec['migrated_kv_bytes']} KV bytes migrated, "
+                  f"zero re-prefill)")
         for ls in stats["lane_stats"]:
             print(f"  lane{ls['lane']} N={ls['n_mux']}: goodput "
                   f"{ls['goodput_tok_s']:.1f} tok/s "
@@ -846,6 +1005,9 @@ def main(argv=None):
                              for k, v in sorted(stats["trace_counts"].items()))
         print(f"compiled programs: {compiled}")
     rec = stats.get("recovery")
+    if args.fence_stragglers and rec:
+        print(f"stragglers: {rec['stragglers_fenced']} fenced, "
+              f"{rec['global_slow_steps']} global slow steps")
     if events and rec:
         lat = rec["recovery_latency_s"]
         line = (f"recovery: {rec['shards_killed']} shard kills, "

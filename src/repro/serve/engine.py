@@ -34,6 +34,7 @@ from repro.core import quant as quantlib
 from repro.models import TransformerLM, EncDecLM, VLM
 from repro.models.config import ModelConfig
 from repro.serve.kvpool import KVPool, ShardedKVPool, blocks_for
+from repro.serve.kvpool import copy_pages as kvpool_copy_pages
 
 
 def backbone_batch(global_batch: int, mux: MuxSpec) -> int:
@@ -194,6 +195,40 @@ def reset_blocks(cache, block_ids):
 
     return {"periods": tuple(upd(c) for c in cache["periods"]),
             "tail": tuple(upd(c) for c in cache["tail"])}
+
+
+def copy_cache_pages(src_cache, dst_cache, src_ids, dst_ids):
+    """Migrate whole pool pages between two cache pytrees (disaggregated
+    serving, DESIGN.md §disaggregated): pages ``src_ids`` of every paged
+    layer in ``src_cache`` are copied into slots ``dst_ids`` of the
+    matching layer in ``dst_cache`` — payload, quant scales, and
+    position entries (``kvpool.copy_pages`` per layer).  The two caches
+    must share layer structure, page shape, and ``kv_dtype``; they may
+    be the same pytree for a cross-shard move inside one pool.  Like
+    ``reset_blocks`` this is a host-orchestrated functional edit, never
+    a jit input — the compile-once contract is untouched."""
+    ids_s = jnp.asarray(list(src_ids), jnp.int32)
+    ids_d = jnp.asarray(list(dst_ids), jnp.int32)
+    if ids_s.shape != ids_d.shape:
+        raise ValueError("page migration needs equal-length id lists")
+    if ids_s.size == 0:
+        return dst_cache
+
+    def upd(s, d):
+        if not (isinstance(d, dict) and "ppos" in d):
+            return d
+        if d["ppos"].ndim == 3:            # period-stacked (P, NB, BS)
+            out = dict(d)
+            for key in ("kp", "vp", "ksc", "vsc", "ppos"):
+                if key in d:
+                    out[key] = d[key].at[:, ids_d].set(s[key][:, ids_s])
+            return out
+        return kvpool_copy_pages(s, d, ids_s, ids_d)
+
+    return {"periods": tuple(upd(s, d) for s, d in
+                             zip(src_cache["periods"], dst_cache["periods"])),
+            "tail": tuple(upd(s, d) for s, d in
+                          zip(src_cache["tail"], dst_cache["tail"]))}
 
 
 def prefill(params, sc: ServeConfig, cache, tokens, *, extra=None,

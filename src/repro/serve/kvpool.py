@@ -205,6 +205,34 @@ class KVPool:
         self._free.extend(reversed(self._tables.pop(cid)))
         del self._lens[cid]
 
+    # -- migration (disaggregated serving; DESIGN.md §disaggregated) -------
+    def migrate_rows(self, cid, dst, dst_cid=None):
+        """Move client ``cid`` out of this pool into ``dst`` (registered
+        there as ``dst_cid``, default the same id): allocate the same
+        block count in the destination, release the source blocks, and
+        return ``(src_blocks, dst_blocks)`` — equal-length id lists the
+        caller must hand to the device page copy (``engine.
+        copy_cache_pages``) so the KV payload (and any quant scales)
+        follows the accounting.  Ids are in each pool's own id space
+        (global when a ``ShardedKVPool`` is involved on that side).
+
+        Atomic: destination allocation goes through the normal allocator
+        (quota + per-seq cap + dead-shard checks apply), and on
+        ``PoolExhausted`` nothing has changed on either side — the
+        stream just keeps serving from the source partition."""
+        if cid not in self._tables:
+            raise PoolError(f"client {cid!r} not allocated")
+        if dst_cid is None:
+            dst_cid = cid
+        if dst is self and dst_cid == cid:
+            raise PoolError(f"client {cid!r}: migration onto itself")
+        dst_blocks = dst.allocate(dst_cid, self._lens[cid])
+        src_blocks = list(self._tables[cid])
+        assert len(dst_blocks) == len(src_blocks), \
+            "source table not minimal — allocator invariant broken"
+        self.free(cid)
+        return src_blocks, dst_blocks
+
     # -- block-table views -------------------------------------------------
     def block_table(self, cid) -> np.ndarray:
         """(max_blocks_per_seq,) int32, -1-padded."""
@@ -469,6 +497,34 @@ class ShardedKVPool:
     def free(self, cid):
         self._shards[self.shard_of(cid)].free(cid)
 
+    # -- migration (disaggregated serving; DESIGN.md §disaggregated) -------
+    def migrate_pages(self, cid, dst_cid=None, dst=None):
+        """Global-id variant of ``KVPool.migrate_rows``: move row ``cid``'s
+        pages into ``dst`` (another pool, or this one for a cross-shard
+        move when ``dst`` is None/self) under id ``dst_cid``.  Returns
+        ``(src_blocks, dst_blocks)`` with ids global in each pool's own
+        space; destination placement goes through the normal allocator,
+        so shard-locality, trash-reservation, quota, and dead-shard
+        fencing all hold for the new blocks by construction.  Atomic on
+        ``PoolExhausted`` — nothing moves."""
+        if dst is None:
+            dst = self
+        if dst_cid is None:
+            dst_cid = cid
+        s = self.shard_of(cid)
+        if not self._shards[s].has(cid):
+            raise PoolError(f"row {cid!r} not allocated")
+        if dst is self and dst_cid == cid:
+            raise PoolError(f"row {cid!r}: migration onto itself")
+        n_tok = self._shards[s].num_tokens(cid)
+        dst_blocks = dst.allocate(dst_cid, n_tok)
+        src_blocks = [b + self._offset(s)
+                      for b in self._shards[s]._tables[cid]]
+        assert len(dst_blocks) == len(src_blocks), \
+            "source table not minimal — allocator invariant broken"
+        self.free(cid)
+        return src_blocks, dst_blocks
+
     # -- block-table views -------------------------------------------------
     def block_table(self, cid) -> np.ndarray:
         s = self.shard_of(cid)
@@ -599,6 +655,39 @@ def paged_write(cache, k, v, positions, block_tables=None, trash=None):
             "vp": cache["vp"].at[page, slot].set(
                 v.astype(cache["vp"].dtype)),
             "ppos": cache["ppos"].at[page, slot].set(stored)}
+
+
+def copy_pages(src, dst, src_ids, dst_ids):
+    """Copy whole pages between two layer caches: pages ``src_ids`` of
+    ``src`` land in slots ``dst_ids`` of ``dst``.  Moves the payload
+    (``kp``/``vp``), the quant scales when present (``ksc``/``vsc`` —
+    scales must follow their pages bit-exactly or dequant corrupts the
+    migrated KV), and the per-slot position map (``ppos``, which carries
+    the -1 mask for unwritten slots, so a partially filled tail page
+    stays masked after migration).
+
+    ``src`` and ``dst`` may be the same dict (cross-shard moves inside
+    one pool).  Functional and eager: a host-orchestrated cache edit
+    like ``engine.reset_blocks`` — never a jit input, so the
+    compile-once contract is untouched.  Page dtypes must already match
+    (migration never re-quantizes).
+    """
+    if len(src_ids) != len(dst_ids):
+        raise ValueError(
+            f"page copy needs equal id lists, got {len(src_ids)} -> "
+            f"{len(dst_ids)}")
+    if len(src_ids) == 0:
+        return dst
+    if src["kp"].dtype != dst["kp"].dtype or ("ksc" in src) != ("ksc" in dst):
+        raise ValueError("source/destination page dtypes differ — "
+                         "cannot migrate pages across kv_dtype")
+    si = jnp.asarray(list(src_ids), jnp.int32)
+    di = jnp.asarray(list(dst_ids), jnp.int32)
+    out = dict(dst)
+    for key in ("kp", "vp", "ksc", "vsc", "ppos"):
+        if key in dst:
+            out[key] = dst[key].at[di].set(src[key][si])
+    return out
 
 
 def paged_view(cache):

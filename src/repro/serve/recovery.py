@@ -96,7 +96,12 @@ def _config_of(rt) -> dict:
             # scales ride the cache tree, and a snapshot written with one
             # kv_dtype must not restore into a pool of another (the page
             # payloads would be misinterpreted)
-            "kv_dtype": rt.sc.kv_dtype}
+            "kv_dtype": rt.sc.kv_dtype,
+            # disaggregated role (DESIGN.md §disaggregated): a prefill
+            # lane's snapshot must not restore into a decode lane — the
+            # restored rows' lifecycle (park-for-handoff vs decode)
+            # depends on it
+            "role": getattr(rt, "role", "both")}
 
 
 def snapshot_state(rt):
@@ -124,6 +129,16 @@ def snapshot_state(rt):
                        for j, a in rt.row_tokens.items()},
         "next_tok": rt.next_tok.tolist(),
         "engine_steps": rt.engine_steps,
+        # in-flight handoffs (DESIGN.md §disaggregated): rows of a
+        # prefill-role lane that finished prefill and are parked waiting
+        # for a decode-lane slot.  The set is derivable from slots +
+        # prefill_progress, but recording it makes the snapshot
+        # self-describing and lets restore cross-check that no handoff
+        # was half-applied at capture time (handoffs are atomic: a row
+        # is fully here or fully in the destination, never split).
+        "pending_handoffs": ([int(j) for j in rt.handoff_ready()]
+                             if getattr(rt, "role", "both") == "prefill"
+                             else []),
     }
     return {"cache": rt.cache}, meta
 
@@ -165,6 +180,17 @@ def restore_state(rt, cache_tree, meta):
                           for j, a in meta["row_tokens"].items()})
     rt.next_tok = np.asarray(meta["next_tok"], np.int32)
     rt.engine_steps = meta["engine_steps"]
+    # cross-check in-flight handoffs: the restored state must re-derive
+    # exactly the parked rows the capture recorded — a mismatch means a
+    # handoff was torn across the snapshot boundary
+    if getattr(rt, "role", "both") == "prefill":
+        want_pending = sorted(int(j) for j in
+                              meta.get("pending_handoffs", []))
+        have_pending = sorted(rt.handoff_ready())
+        if want_pending != have_pending:
+            raise ValueError(
+                f"snapshot pending handoffs {want_pending} do not match "
+                f"restored state {have_pending} — torn handoff")
     # the cache leaves carried the block tables, but re-install from the
     # restored allocator anyway: the pool is the source of truth and the
     # mesh shardings must be re-asserted after the device_put restore
@@ -216,7 +242,14 @@ class RecoverySupervisor:
                       "recovery_latency_s": [],
                       "lane_drains": 0, "lane_adds": 0,
                       "lanes_retired": 0, "snapshots": 0, "restarts": 0,
-                      "restore_latency_s": []}
+                      "restore_latency_s": [],
+                      "handoffs": 0, "handoff_streams": 0,
+                      "migrated_kv_bytes": 0,
+                      "stragglers_fenced": 0, "global_slow_steps": 0}
+        # (lane, shard) -> StragglerDetector, lazily built once
+        # enable_straggler_fencing installs a factory
+        self._straggler_factory = None
+        self._detectors: dict = {}
 
     # -- kill-a-shard ------------------------------------------------------
     def kill_shard(self, rt, shard: int):
@@ -260,6 +293,73 @@ class RecoverySupervisor:
             else:
                 still.append((r, n0, t0))
         self._pending = still
+
+    # -- handoff accounting (DESIGN.md §disaggregated) ---------------------
+    def note_handoff(self, plan, nbytes: int):
+        """Record one executed prefill→decode handoff (the serve loop
+        calls this with the ``HandoffPlan`` returned by
+        ``ServeRuntime.handoff_to`` and the migrated page bytes)."""
+        self.stats["handoffs"] += 1
+        self.stats["handoff_streams"] += len(plan.uids)
+        self.stats["migrated_kv_bytes"] += nbytes
+
+    # -- straggler fencing (ROADMAP §fault tolerance) ----------------------
+    def enable_straggler_fencing(self, **kw):
+        """Arm proactive shard fencing: per-(lane, shard) step-time
+        detectors (``runtime.fault_tolerance.StragglerDetector``,
+        keyword args forwarded) watch the shard step times the serve
+        loop feeds through ``observe_shard_times``; a shard whose step
+        time deviates from its own EWMA baseline is fenced through the
+        EXISTING ``kill_shard`` replay path before it fails outright —
+        detection is new, the mitigation is the already-tested one."""
+        from repro.runtime.fault_tolerance import StragglerDetector
+        self._straggler_factory = lambda: StragglerDetector(**kw)
+
+    @property
+    def fencing_enabled(self) -> bool:
+        return self._straggler_factory is not None
+
+    def observe_shard_times(self, rt, times: dict):
+        """Feed one serve step's per-shard step times (seconds) for
+        runtime ``rt`` and fence a detected straggler.
+
+        ``times``: {shard: dt} over alive shards.  Each (lane, shard)
+        pair keeps its own EWMA baseline.  Fencing fires only when
+        EXACTLY one shard flags: a step that is slow for every shard is
+        a global stall (GC, host contention), not a straggler — fencing
+        on it would shoot a healthy shard (and with uniform probe
+        times, all-or-none flagging makes a wrong fence structurally
+        impossible).  The last alive shard is never fenced.  Returns
+        the fenced shard id or None."""
+        if self._straggler_factory is None:
+            return None
+        flagged = []
+        for shard, dt in sorted(times.items()):
+            key = (rt.lane, shard)
+            det = self._detectors.get(key)
+            if det is None:
+                det = self._detectors[key] = self._straggler_factory()
+            if det.observe(rt.engine_steps, dt):
+                flagged.append(shard)
+        if not flagged:
+            return None
+        if len(flagged) > 1:
+            self.stats["global_slow_steps"] += 1
+            if self.tele.enabled:
+                self.tele.instant("global_slow_step", lane=rt.lane,
+                                  shards=len(flagged))
+            return None
+        shard = flagged[0]
+        alive = rt.sc.n_shards - len(rt.sched.dead_shards)
+        if shard in rt.sched.dead_shards or alive < 2:
+            return None
+        self.kill_shard(rt, shard)
+        self.stats["stragglers_fenced"] += 1
+        if self.tele.enabled:
+            self.tele.inc("stragglers_fenced", lane=rt.lane, shard=shard)
+            self.tele.instant("straggler_fenced", lane=rt.lane,
+                              shard=shard, dt=times[shard])
+        return shard
 
     # -- live lane resize --------------------------------------------------
     def drain_lane(self, router, lane: int, step: int | None = None) -> int:

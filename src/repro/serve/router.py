@@ -86,10 +86,15 @@ class LaneSpec:
     rows:  backbone rows of the lane's N_mux × rows grid.
     chunk: prefill chunk size (None = blocking prefill) for this lane —
            latency lanes may want smaller chunks than throughput lanes.
+    role:  disaggregated serving (DESIGN.md §disaggregated): "both"
+           (default, interleaved prefill+decode), "prefill" (admissions
+           and chunks only — finished rows hand off) or "decode"
+           (decode only — rows arrive by KV-page migration).
     """
     n_mux: int
     rows: int
     chunk: int | None = 32
+    role: str = "both"
 
     @property
     def slots(self) -> int:
@@ -139,13 +144,28 @@ class LaneRouter:
 
     def __init__(self, runtimes, *, spill_queue: int | None = None,
                  budget: int | None = None, telemetry=None,
-                 ttft_slo: dict | None = None):
+                 ttft_slo: dict | None = None, mode: str = "load"):
         if not runtimes:
             raise ValueError("need at least one lane")
-        widths = [rt.n_mux for rt in runtimes]
+        if mode not in ("load", "goodput"):
+            raise ValueError(f"mode must be load|goodput, got {mode!r}")
+        # admission routes only to lanes that can PREFILL a new request
+        # ('both'/'prefill' roles); decode-only lanes receive streams via
+        # handoff (``handoff_targets``), never from the queue — so width
+        # uniqueness, the per-width routing key, applies to routable
+        # lanes only (a disaggregated pair shares one width by design)
+        widths = [rt.n_mux for rt in runtimes
+                  if getattr(rt, "role", "both") != "decode"]
+        if not widths:
+            raise ValueError("need at least one routable (non-decode) lane")
         if len(set(widths)) != len(widths):
-            raise ValueError(f"duplicate lane widths {widths}")
+            raise ValueError(f"duplicate routable lane widths {widths}")
         self.runtimes = list(runtimes)
+        self.mode = mode
+        # lane id -> latest published goodput signal (``lane_stats``);
+        # goodput-mode routing stable-sorts candidates on it, so a
+        # uniform/absent signal degenerates to plain load routing
+        self._goodput: dict = {}
         self.spill_queue = spill_queue
         self.budget = budget
         # live lane resize (DESIGN.md §fault tolerance): lanes draining
@@ -300,7 +320,10 @@ class LaneRouter:
         per-width compile-once contract ambiguous) and its lane id
         unused.  With a budget, quotas re-split across the grown lane
         set (floors at live usage).  Returns the new lane's index."""
-        if any(x.n_mux == rt.n_mux for x in self.runtimes):
+        if getattr(rt, "role", "both") != "decode" and any(
+                x.n_mux == rt.n_mux
+                and getattr(x, "role", "both") != "decode"
+                for x in self.runtimes):
             raise ValueError(f"duplicate lane width {rt.n_mux}")
         if any(x.lane == rt.lane for x in self.runtimes + self.retired):
             raise ValueError(f"lane id {rt.lane} already used")
@@ -385,8 +408,31 @@ class LaneRouter:
         return moved
 
     # -- routing policy ----------------------------------------------------
+    def _routable(self) -> list:
+        """Lane indices admission may route to (decode-only lanes are
+        handoff destinations, not admission targets)."""
+        return [i for i, rt in enumerate(self.runtimes)
+                if getattr(rt, "role", "both") != "decode"]
+
+    def _goodput_order(self, order: list) -> list:
+        """Goodput mode: stable-sort candidate lanes by their latest
+        published goodput signal, best first.  Stable + uniform-signal
+        short-circuit means ties and cold starts fall back to exactly
+        the load-order decision (the degenerate-to-load property the
+        router tests pin down); lanes without a signal yet are scored
+        at the observed max so new lanes still get explored."""
+        scores = {i: self._goodput.get(self.runtimes[i].lane)
+                  for i in order}
+        known = [s for s in scores.values() if s is not None]
+        if not known or max(known) <= min(known):
+            return list(order)
+        default = max(known)
+        return sorted(order, key=lambda i: -(
+            scores[i] if scores[i] is not None else default))
+
     def _pref_order(self, slo: str) -> list:
-        bw = self._by_width
+        routable = set(self._routable())
+        bw = [i for i in self._by_width if i in routable]
         if slo == SLO_LATENCY:
             return list(bw)
         if slo == SLO_THROUGHPUT:
@@ -438,6 +484,8 @@ class LaneRouter:
             order = active
         else:
             self.registry.inc("router_drain_overflow")
+        if self.mode == "goodput":
+            order = self._goodput_order(order)
         loads = {i: self.runtimes[i].load() for i in order}
         chosen = next((i for i in order if not self._saturated(i, loads[i])),
                       None)
@@ -461,6 +509,28 @@ class LaneRouter:
     def loads(self) -> list:
         return [rt.load() for rt in self.runtimes]
 
+    # -- handoff-target selection (DESIGN.md §disaggregated) ---------------
+    def handoff_targets(self, n_mux: int) -> list:
+        """Candidate lanes for a finished-prefill row of width
+        ``n_mux``, best first: decode-capable ('decode'/'both' role),
+        same width (a muxed row cannot change composition), and not
+        draining (a draining lane finishes its placed streams but
+        accepts no new ones — drain semantics are preserved across
+        handoff).  Ordered by least pressure; goodput mode stable-sorts
+        the published lane signal on top, exactly like admission.  The
+        orchestrator tries candidates in order until one has a free row
+        and pool headroom — an empty list parks the row in its prefill
+        lane (backpressure, not an error)."""
+        cands = [i for i, rt in enumerate(self.runtimes)
+                 if getattr(rt, "role", "both") != "prefill"
+                 and rt.n_mux == n_mux
+                 and rt.lane not in self.draining]
+        loads = {i: self.runtimes[i].load() for i in cands}
+        cands.sort(key=lambda i: loads[i].pressure)
+        if self.mode == "goodput":
+            cands = self._goodput_order(cands)
+        return cands
+
     # -- goodput accounting ------------------------------------------------
     def lane_stats(self, wall: float | None = None) -> list:
         """Per-lane goodput accounting: TTFT-SLO attainment × tokens/s —
@@ -482,6 +552,10 @@ class LaneRouter:
                         "ttft_measured": measured,
                         "slo_attainment": attain, "tok_s": tok_s,
                         "goodput_tok_s": goodput})
+            # the routing signal goodput mode sorts on: goodput when
+            # wall time is known, bare attainment otherwise
+            self._goodput[rt.lane] = (goodput if goodput is not None
+                                      else attain)
             self.registry.gauge("lane_ttft_slo_attainment", attain,
                                 lane=rt.lane)
             if goodput is not None:

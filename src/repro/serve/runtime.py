@@ -66,8 +66,8 @@ import jax.numpy as jnp
 
 from repro.serve import sampling
 from repro.serve.engine import (ServeConfig, init_cache, make_pool, prefill,
-                                prefill_chunk, decode_step,
-                                set_block_tables, reset_blocks)
+                                prefill_chunk, decode_step, set_block_tables,
+                                reset_blocks, copy_cache_pages)
 from repro.serve.kvpool import PoolExhausted
 from repro.serve.scheduler import ContinuousScheduler
 from repro.serve.telemetry import NULL_TELEMETRY
@@ -116,9 +116,15 @@ class ServeRuntime:
                  chunk: int | None = 32, pad_id: int = 0,
                  default_sampling=None, on_prefill=None,
                  use_kernels: bool = False, mesh=None, lane: int = 0,
-                 telemetry=None):
+                 telemetry=None, role: str = "both"):
         if sc.cache_layout != "paged":
             raise ValueError("ServeRuntime requires cache_layout='paged'")
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"role must be both|prefill|decode, got {role!r}")
+        if role == "prefill" and chunk is None:
+            # a prefill-only lane exists to overlap chunk cadence with a
+            # sibling decode lane; blocking prefill would defeat it
+            raise ValueError("a prefill-role lane requires chunked prefill")
         if sc.kind != "lm":
             raise NotImplementedError(
                 "continuous serving supports decoder-only LM families")
@@ -166,10 +172,12 @@ class ServeRuntime:
         self.use_kernels = use_kernels
         self.mesh = mesh
         self.lane = lane
+        self.role = role
         self.tele = telemetry if telemetry is not None else NULL_TELEMETRY
         if self.tele.enabled:
+            tag = f" [{role}]" if role != "both" else ""
             self.tele.tracer.process_name(
-                lane, f"lane {lane} (N={self.n_mux})")
+                lane, f"lane {lane} (N={self.n_mux}){tag}")
 
         self.sched = ContinuousScheduler(n_mux=self.n_mux,
                                          backbone_batch=backbone_rows,
@@ -210,7 +218,9 @@ class ServeRuntime:
                       "completed": self.sched.completed, "pool": self.pool,
                       "trace_counts": self.trace_counts,
                       "n_mux": self.n_mux, "rows": backbone_rows,
-                      "lane": lane,
+                      "lane": lane, "role": role,
+                      "handoffs_out": 0, "handoffs_in": 0,
+                      "migrated_bytes": 0,
                       "prefill_mode": ("chunked" if chunk is not None
                                        else "blocking")}
         # donation: the cache pytree (arg 1) is consumed and returned by
@@ -413,6 +423,96 @@ class ServeRuntime:
                               reclaimed_quota=reclaimed)
         return replayed
 
+    # -- disaggregated handoff (DESIGN.md §disaggregated) ------------------
+    def handoff_ready(self):
+        """Rows whose prompt is fully prefilled and whose streams are
+        still live — the set a prefill-role lane offers for handoff.
+        Their first generated tokens are already recorded (``_exec_chunk``
+        on the last chunk), so a decode lane can continue them with zero
+        re-prefill."""
+        return [j for j in sorted(self.row_len)
+                if j not in self.sched.prefill_progress
+                and self.sched.row_active(j)]
+
+    def free_rows(self):
+        """Rows that can receive a handoff: empty, holding no blocks,
+        and on an alive shard."""
+        return [j for j in range(self.nrows)
+                if not self.sched.row_active(j)
+                and j not in self.row_len
+                and j not in self.sched.prefill_progress
+                and self.sched.shard_of(j) not in self.sched.dead_shards]
+
+    def handoff_to(self, dst, j: int, dst_row: int):
+        """Migrate row ``j``'s finished-prefill mux group into runtime
+        ``dst`` at ``dst_row``: pool pages move via the migration
+        primitive (quant scales included), the device payload follows
+        via ``copy_cache_pages``, block tables are rebased to the
+        destination pool's ids, and the streams' slots / host token
+        state transfer — no re-prefill anywhere.  Returns the executed
+        ``HandoffPlan`` (None when the destination pool cannot take the
+        row right now — nothing has changed, retry later).
+
+        The group moves whole (same mux width — muxed KV is inseparable
+        from its stream composition) and the caches must share page
+        geometry and ``kv_dtype`` (migration never re-quantizes)."""
+        if dst is self:
+            raise ValueError("handoff requires a distinct destination lane")
+        if dst.n_mux != self.n_mux:
+            raise ValueError(
+                f"handoff across widths (N={self.n_mux} -> {dst.n_mux}): "
+                "a muxed row cannot change composition")
+        if (dst.sc.block_size != self.sc.block_size
+                or dst.sc.kv_dtype != self.sc.kv_dtype
+                or dst.sc.capacity != self.sc.capacity):
+            raise ValueError("handoff lanes must share page geometry "
+                             "(block_size / capacity / kv_dtype)")
+        plan = self.sched.plan_handoff(j, dst.lane, dst_row,
+                                       self.pool.num_tokens(j))
+        try:
+            if hasattr(self.pool, "migrate_pages"):
+                src_blocks, dst_blocks = self.pool.migrate_pages(
+                    j, dst_row, dst=dst.pool)
+            else:
+                src_blocks, dst_blocks = self.pool.migrate_rows(
+                    j, dst.pool, dst_row)
+        except PoolExhausted:
+            if self.tele.enabled:
+                self.tele.inc("handoff_deferrals", lane=self.lane,
+                              dst_lane=dst.lane)
+            return None
+        nbytes = (len(src_blocks) * self.sc.block_size
+                  * self.sc.kv_bytes_per_token())
+        with self.tele.span("handoff", lane=self.lane, dst_lane=dst.lane,
+                            metric="handoff_s", row=j, dst_row=dst_row,
+                            tokens=plan.tokens, blocks=len(src_blocks),
+                            bytes=nbytes):
+            dst.cache = copy_cache_pages(self.cache, dst.cache,
+                                         src_blocks, dst_blocks)
+            self.cache = set_block_tables(
+                self.cache, self.pool.table_array(range(self.nrows)))
+            self._commit_cache()
+            dst.cache = set_block_tables(
+                dst.cache, dst.pool.table_array(range(dst.nrows)))
+            dst._commit_cache()
+            slots = self.sched.retire_handoff(plan)
+            dst.sched.admit_handoff(plan, slots)
+            dst.row_len[dst_row] = self.row_len.pop(j)
+            dst.row_tokens[dst_row] = self.row_tokens.pop(j)
+            dst.next_tok[:, dst_row] = self.next_tok[:, j]
+            self.next_tok[:, j] = self.pad_id
+        self.stats["handoffs_out"] += 1
+        self.stats["migrated_bytes"] += nbytes
+        dst.stats["handoffs_in"] += 1
+        if self.tele.enabled:
+            self.tele.inc("handoffs", lane=self.lane, dst_lane=dst.lane)
+            self.tele.inc("migration_bytes", nbytes, lane=self.lane,
+                          dst_lane=dst.lane)
+            self.tele.instant("handoff", lane=self.lane, dst_lane=dst.lane,
+                              row=j, dst_row=dst_row, tokens=plan.tokens,
+                              streams=len(plan.uids))
+        return plan
+
     def step(self):
         """One engine step: execute this step's batch of scheduler plans.
 
@@ -435,18 +535,29 @@ class ServeRuntime:
         Every plan executed here carries this runtime's ``lane`` id and
         a ``shard`` scope where relevant; the runtime never executes a
         plan from another lane's scheduler (lane isolation is
-        structural — one scheduler, pool and step set per lane)."""
+        structural — one scheduler, pool and step set per lane).
+
+        Disaggregated roles (DESIGN.md §disaggregated) gate the legs: a
+        ``prefill`` lane runs admissions/chunks/frees only — its
+        finished rows park (first tokens already recorded) until the
+        orchestrator hands them to a decode lane; a ``decode`` lane runs
+        decode/frees only — its rows arrive via ``admit_handoff``, so it
+        never admits from its own queue (streams preempted there are
+        re-routed by the orchestrator, since re-prefill is prefill-lane
+        work)."""
         with self.tele.span("engine_step", lane=self.lane,
                             metric="step_latency_s"):
-            self._exec_admissions()
-            for plan in self.sched.plan_chunks(self.chunk):
-                self._exec_chunk(plan)
-            self._exec_frees()             # e.g. max_new=1 done at prefill
-            dp = self.sched.plan_decode()
-            rows = [j for j in dp.rows if j in self.row_len]
-            if rows:
-                self._exec_decode(rows)
-                self._exec_frees()
+            if self.role != "decode":
+                self._exec_admissions()
+                for plan in self.sched.plan_chunks(self.chunk):
+                    self._exec_chunk(plan)
+                self._exec_frees()         # e.g. max_new=1 done at prefill
+            if self.role != "prefill":
+                dp = self.sched.plan_decode()
+                rows = [j for j in dp.rows if j in self.row_len]
+                if rows:
+                    self._exec_decode(rows)
+                    self._exec_frees()
         self.engine_steps += 1
         if self.tele.enabled:
             self._record_pool_gauges()

@@ -116,6 +116,31 @@ class DecodePlan:
 
 
 @dataclass(frozen=True)
+class HandoffPlan:
+    """Move a finished-prefill mux group from its prefill lane into a
+    decode lane (disaggregated serving, DESIGN.md §disaggregated).
+
+    The group moves as a WHOLE backbone row: mux combine is nonlinear
+    through the backbone, so a row's muxed KV belongs to the exact
+    stream composition that prefilled it — a handoff may relocate the
+    row (same width, different lane/shard/pool partition) but never
+    split or re-mix it.  Emitted by the SOURCE lane's scheduler once the
+    row's prompt is fully prefilled and its first tokens are already
+    recorded; the orchestrator (``launch.serve``) then executes the page
+    migration and installs the streams into the destination via
+    ``admit_handoff``.  No re-prefill happens on either side: the
+    destination admits the row mid-flight with its KV pages migrated
+    bit-exactly and its block table rebased to the new pool's ids.
+    """
+    row: int                      # source backbone row
+    dst_row: int                  # destination backbone row
+    lane: int = 0                 # source lane (emitting scheduler)
+    dst_lane: int = 0             # destination lane
+    tokens: int = 0               # KV tokens migrating with the row
+    uids: tuple = ()              # request uids riding the handoff
+
+
+@dataclass(frozen=True)
 class FreePlan:
     """A drained row (no live stream): the runtime returns the row's
     blocks to its pool (segment) if it still holds any.  Emitted AFTER
@@ -332,6 +357,52 @@ class ContinuousScheduler:
                 for j in range(self.backbone_batch)
                 if j not in self.prefill_progress
                 and not self.row_active(j)]
+
+    # -- handoff (disaggregated serving; DESIGN.md §disaggregated) ---------
+    def plan_handoff(self, j: int, dst_lane: int, dst_row: int,
+                     tokens: int) -> HandoffPlan:
+        """Emit a HandoffPlan for row ``j``: active, prefill complete.
+        ``tokens`` is the row's live KV length (pool knowledge, supplied
+        by the runtime)."""
+        if j in self.prefill_progress:
+            raise ValueError(f"row {j} is mid-prefill — not handoff-ready")
+        if not self.row_active(j):
+            raise ValueError(f"row {j} has no live streams")
+        uids = tuple(s.request.uid for s in self.slots[j]
+                     if s.request is not None)
+        return HandoffPlan(row=j, dst_row=dst_row, lane=self.lane,
+                           dst_lane=dst_lane, tokens=tokens, uids=uids)
+
+    def retire_handoff(self, plan: HandoffPlan) -> list:
+        """Source side of a handoff: detach row ``plan.row``'s slots
+        WITHOUT requeueing or retiring the streams (they live on in the
+        destination lane) and return them for ``admit_handoff``."""
+        slots = self.slots[plan.row]
+        self.slots[plan.row] = [StreamSlot() for _ in range(self.n_mux)]
+        return slots
+
+    def admit_handoff(self, plan: HandoffPlan, slots: list):
+        """Destination side: install a migrated row's slots at
+        ``plan.dst_row`` mid-flight.  The row joins the decode grid
+        directly — no prefill_progress entry is created, which is the
+        structural form of the zero-re-prefill guarantee (nothing here
+        can ever emit a PrefillChunkPlan for the row)."""
+        if any(s.request is not None for s in self.slots[plan.dst_row]):
+            raise ValueError(f"row {plan.dst_row} is occupied")
+        if plan.dst_row in self.prefill_progress:
+            raise ValueError(f"row {plan.dst_row} is mid-prefill")
+        if len(slots) != self.n_mux:
+            raise ValueError(
+                f"handoff carries {len(slots)} slots into an N={self.n_mux} "
+                "lane — handoffs must preserve the mux width")
+        self.slots[plan.dst_row] = slots
+        for s in slots:
+            if s.request is not None:
+                s.request.lane = self.lane
+        if self.telemetry.enabled:
+            self.telemetry.inc("handoff_streams",
+                               sum(1 for s in slots if s.request is not None),
+                               lane=self.lane)
 
     def preempt_row(self, j: int):
         """Requeue row j's live requests at the head of the queue (their

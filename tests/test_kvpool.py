@@ -1,13 +1,15 @@
 """KVPool allocator: alloc/append/free lifecycle, exhaustion, block-table
 consistency under churn (property-tested when hypothesis is available),
-and the device-side paged write/gather ops."""
+the device-side paged write/gather ops, and KV page migration between
+pool partitions (DESIGN.md §disaggregated serving)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.serve.kvpool import (KVPool, ShardedKVPool, PoolError,
                                 PoolExhausted, TRASH_BLOCK, blocks_for,
-                                init_pages, paged_write, paged_view)
+                                copy_pages, init_pages, paged_write,
+                                paged_view)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -370,6 +372,221 @@ def test_sharded_pool_quota_splits_per_shard():
     assert p.quota is None
     p.allocate(1, 12)
     p.check_invariants()
+
+
+# ------------------------------------------------------------- migration
+
+def test_migrate_rows_frees_source_and_lands_whole():
+    src = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    dst = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    src.allocate("a", 10)
+    sb, db = src.migrate_rows("a", dst)
+    assert len(sb) == len(db) == 3
+    assert not src.has("a") and dst.has("a")
+    assert dst.num_tokens("a") == 10
+    assert src.n_free_blocks == 8 and dst.n_used_blocks == 3
+    dst.append("a")                      # 11 tokens, still 3 blocks
+    assert dst.num_tokens("a") == 11
+    src.check_invariants()
+    dst.check_invariants()
+
+
+def test_migrate_rows_rejects_self_and_missing():
+    src = KVPool(num_blocks=5, block_size=4, max_blocks_per_seq=2)
+    dst = KVPool(num_blocks=5, block_size=4, max_blocks_per_seq=2)
+    with pytest.raises(PoolError):
+        src.migrate_rows("ghost", dst)
+    src.allocate("a", 4)
+    with pytest.raises(PoolError):
+        src.migrate_rows("a", src)       # onto itself
+    src.migrate_rows("a", src, dst_cid="b")   # same pool, new id is fine
+    assert not src.has("a") and src.has("b")
+    src.check_invariants()
+
+
+def test_migrate_rows_atomic_on_dst_exhaustion():
+    """A failed migration (destination pool full) must leave the source
+    row untouched and the destination clean — no half-moved row."""
+    src = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    dst = KVPool(num_blocks=3, block_size=4, max_blocks_per_seq=4)
+    src.allocate("a", 12)                # 3 blocks > dst's 2 allocatable
+    with pytest.raises(PoolExhausted):
+        src.migrate_rows("a", dst)
+    assert src.has("a") and src.num_tokens("a") == 12
+    assert not dst.has("a") and dst.n_used_blocks == 0
+    src.check_invariants()
+    dst.check_invariants()
+
+
+def test_migrate_rows_respects_dst_quota():
+    """Migration allocates under the destination's quota like any other
+    admission: quota exhausted -> PoolExhausted, source intact."""
+    src = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4)
+    dst = KVPool(num_blocks=9, block_size=4, max_blocks_per_seq=4, quota=1)
+    src.allocate("a", 8)                 # 2 blocks > quota 1
+    with pytest.raises(PoolExhausted):
+        src.migrate_rows("a", dst)
+    assert src.has("a") and not dst.has("a")
+    dst.set_quota(None)
+    src.migrate_rows("a", dst)
+    assert dst.num_tokens("a") == 8
+    dst.check_invariants()
+
+
+def test_migrate_pages_sharded_crosses_partitions():
+    """ShardedKVPool.migrate_pages returns GLOBAL page ids on both sides
+    and lands the row on the destination row's own shard segment."""
+    src = ShardedKVPool(num_blocks=12, block_size=4, max_blocks_per_seq=3,
+                        n_shards=2, n_rows=4)
+    dst = ShardedKVPool(num_blocks=12, block_size=4, max_blocks_per_seq=3,
+                        n_shards=2, n_rows=4)
+    src.allocate(2, 8)                   # shard 1: global ids in (6, 12)
+    sb, db = src.migrate_pages(2, dst_cid=0, dst=dst)   # -> shard 0
+    assert all(6 < b < 12 for b in sb)
+    assert all(0 < b < 6 for b in db)
+    assert not src.has(2) and dst.has(0)
+    assert dst.num_tokens(0) == 8 and dst.shard_of(0) == 0
+    with pytest.raises(PoolError):
+        dst.migrate_pages(0)             # onto itself
+    src.check_invariants()
+    dst.check_invariants()
+
+
+@pytest.mark.parametrize("quant", [None, "int8", "fp8"])
+def test_copy_pages_bit_exact(quant):
+    """Migrated pages are bit-exact: payload, quant scales (when
+    present) and the per-slot position mask all match the source pages
+    after ``copy_pages`` — migration never re-quantizes."""
+    bs, hk, hd = 4, 2, 8
+    src_pool = KVPool(num_blocks=6, block_size=bs, max_blocks_per_seq=3)
+    dst_pool = KVPool(num_blocks=6, block_size=bs, max_blocks_per_seq=3)
+    src_pool.allocate(0, 6)              # 2 blocks, tail half-filled
+    dst_pool.allocate("pad", 4)          # offset dst ids away from src's
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((1, 6, hk, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 6, hk, hd)), jnp.float32)
+    src_cache = init_pages(6, bs, hk, hd, jnp.float32, quant=quant)
+    src_cache["bt"] = jnp.asarray(src_pool.table_array([0]))
+    src_cache = paged_write(src_cache, k, v, jnp.arange(6)[None])
+    dst_cache = init_pages(6, bs, hk, hd, jnp.float32, quant=quant)
+    sb, db = src_pool.migrate_rows(0, dst_pool)
+    dst_cache = copy_pages(src_cache, dst_cache, sb, db)
+    keys = ("kp", "vp", "ppos") + (("ksc", "vsc") if quant else ())
+    for key in keys:
+        np.testing.assert_array_equal(
+            np.asarray(dst_cache[key][np.asarray(db)]),
+            np.asarray(src_cache[key][np.asarray(sb)]),
+            err_msg=f"{key} pages not bit-exact after migration")
+    # the tail page's unwritten slots keep their -1 mask
+    assert (np.asarray(dst_cache["ppos"][db[-1], 2:]) == -1).all()
+    # untouched destination pages stay untouched
+    others = np.asarray([i for i in range(6) if i not in db])
+    assert (np.asarray(dst_cache["ppos"])[others] == -1).all()
+
+
+def test_copy_pages_rejects_dtype_mismatch():
+    bs, hk, hd = 4, 1, 4
+    a = init_pages(4, bs, hk, hd, jnp.float32)
+    q = init_pages(4, bs, hk, hd, jnp.float32, quant="int8")
+    with pytest.raises(ValueError):
+        copy_pages(a, q, [1], [1])
+    with pytest.raises(ValueError):
+        copy_pages(a, a, [1, 2], [1])
+    assert copy_pages(a, q, [], []) is q   # empty move is a no-op
+
+
+def _churn_migrate(pa, pb, ops, n_clients=6):
+    """alloc/append/free/migrate interleavings over a pool pair; checks
+    free-list conservation, migration atomicity and trash-never-live
+    after every op."""
+    alloc_a = pa.num_blocks - pa.n_shards if hasattr(pa, "n_shards") \
+        else pa.num_blocks - 1
+    live = {}
+    for kind, cid, n in ops:
+        try:
+            if kind == 0 and cid not in live:
+                pa.allocate(cid, n)
+                live[cid] = pa
+            elif kind == 1 and cid in live:
+                live[cid].append(cid, n)
+            elif kind == 2 and cid in live:
+                live[cid].free(cid)
+                del live[cid]
+            elif kind == 3 and cid in live:
+                src = live[cid]
+                dst = pb if src is pa else pa
+                toks = src.num_tokens(cid)
+                try:
+                    if hasattr(src, "migrate_pages"):
+                        src.migrate_pages(cid, dst=dst)
+                    else:
+                        src.migrate_rows(cid, dst)
+                except PoolExhausted:
+                    # atomic: the source row survives a failed landing
+                    assert src.has(cid)
+                    assert src.num_tokens(cid) == toks
+                    assert not dst.has(cid)
+                else:
+                    live[cid] = dst
+                    assert dst.num_tokens(cid) == toks
+                    assert not src.has(cid)
+        except PoolExhausted:
+            pass
+        for p in (pa, pb):
+            p.check_invariants()
+            assert not (_live_blocks(p, range(n_clients)) & _trash_ids(p))
+        # conservation: no block leaks or double-books across the pair
+        assert pa.n_used_blocks + pa.n_free_blocks == alloc_a
+        assert pb.n_used_blocks + pb.n_free_blocks == alloc_a
+        assert (pa.n_used_blocks + pb.n_used_blocks
+                == sum(len([b for b in live[c].block_table(c) if b >= 0])
+                       for c in live))
+    return live
+
+
+def test_migrate_churn_deterministic():
+    rng = np.random.default_rng(7)
+    pa = KVPool(num_blocks=11, block_size=4, max_blocks_per_seq=4)
+    pb = KVPool(num_blocks=11, block_size=4, max_blocks_per_seq=4)
+    ops = [(int(rng.integers(4)), int(rng.integers(6)),
+            int(rng.integers(1, 12))) for _ in range(300)]
+    _churn_migrate(pa, pb, ops)
+
+
+def test_migrate_churn_sharded_deterministic():
+    """Same interleavings through two sharded pools: rows keep their
+    shard mapping on both sides, quotas and segments hold."""
+    rng = np.random.default_rng(8)
+    mk = lambda: ShardedKVPool(num_blocks=16, block_size=4,
+                               max_blocks_per_seq=3, n_shards=2, n_rows=6)
+    pa, pb = mk(), mk()
+    pb.set_quota(10)                     # migrations land under a quota
+    ops = [(int(rng.integers(4)), int(rng.integers(6)),
+            int(rng.integers(1, 12))) for _ in range(300)]
+    _churn_migrate(pa, pb, ops)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5),
+                          st.integers(1, 12)), max_size=120))
+def test_migrate_churn_property(ops):
+    """Pages conserve, migrations are atomic, trash never goes live —
+    under arbitrary alloc/append/free/migrate interleavings."""
+    _churn_migrate(KVPool(num_blocks=11, block_size=4,
+                          max_blocks_per_seq=4),
+                   KVPool(num_blocks=11, block_size=4,
+                          max_blocks_per_seq=4), ops)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5),
+                          st.integers(1, 12)), max_size=100))
+def test_migrate_churn_sharded_property(ops):
+    mk = lambda: ShardedKVPool(num_blocks=16, block_size=4,
+                               max_blocks_per_seq=3, n_shards=2, n_rows=6)
+    pa, pb = mk(), mk()
+    pb.set_quota(10)
+    _churn_migrate(pa, pb, ops)
 
 
 def test_sharded_pool_quota_shrink_floors_at_shard_usage():

@@ -130,6 +130,68 @@ def test_kill_shard_replay_token_identical(model):
     assert sup.shrink_plans[-1].mesh_shape == (1, 1)
 
 
+def test_straggler_fenced_before_failure(model):
+    """A shard whose step times degrade alone is fenced via the
+    existing kill-shard replay path BEFORE it fails outright: its
+    streams replay onto survivors and every token matches the
+    undisturbed run (the fence is just a proactive kill)."""
+    cfg, params = model
+    base, _ = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                  chunk=4), _requests(cfg))
+    sup = RecoverySupervisor()
+    assert not sup.fencing_enabled
+    sup.enable_straggler_fencing(warmup_steps=3)
+    assert sup.fencing_enabled
+    fenced = []
+
+    def on_step(rt, step):
+        times = {s: 0.01 for s in range(2)
+                 if s not in rt.sched.dead_shards}
+        if step >= 4 and 1 in times:
+            times[1] = 0.5               # shard 1 degrades 50x, alone
+        got = sup.observe_shard_times(rt, times)
+        if got is not None:
+            fenced.append(got)
+        sup.note_step()
+        return rt
+
+    out, rt = _drive(ServeRuntime(params, _sc(cfg, n_shards=2), ROWS,
+                                  chunk=4), _requests(cfg),
+                     on_step=on_step)
+    assert fenced == [1], "slow shard was not fenced"
+    assert rt.pool.dead_shards == {1}
+    assert sup.stats["stragglers_fenced"] == 1
+    assert sup.stats["shards_killed"] == 1        # fence = proactive kill
+    assert sup.stats["global_slow_steps"] == 0
+    assert out == base, "fencing changed the token streams"
+    assert all(v == 1 for v in rt.trace_counts.values())
+
+
+def test_global_slowdown_is_not_fenced(model):
+    """Every shard spiking together is a global stall (GC pause, host
+    contention) — fencing one of them would kill a healthy shard, so
+    the supervisor only books a global_slow_step."""
+    cfg, params = model
+    rt = ServeRuntime(params, _sc(cfg, n_shards=2), ROWS, chunk=4)
+    sup = RecoverySupervisor()
+    # fencing disarmed: observations are dropped without detectors
+    assert sup.observe_shard_times(rt, {0: 9.9, 1: 0.01}) is None
+    sup.enable_straggler_fencing(warmup_steps=3)
+    for _ in range(5):
+        assert sup.observe_shard_times(rt, {0: 0.01, 1: 0.01}) is None
+    assert sup.observe_shard_times(rt, {0: 0.5, 1: 0.5}) is None
+    assert sup.stats["global_slow_steps"] == 1
+    assert sup.stats["stragglers_fenced"] == 0
+    assert not rt.sched.dead_shards
+    # ... and the sole surviving shard is never fenced, however slow
+    # (fencing it would kill the whole lane)
+    single = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)
+    for _ in range(5):
+        sup.observe_shard_times(single, {0: 0.01})
+    assert sup.observe_shard_times(single, {0: 0.9}) is None
+    assert not single.sched.dead_shards
+
+
 def test_kill_shard_guards(model):
     cfg, params = model
     rt1 = ServeRuntime(params, _sc(cfg), ROWS, chunk=4)

@@ -354,3 +354,121 @@ def test_lane_stats_goodput_accounting():
     loose, _ = mk_router((1,), ttft_slo={s: 10.0 for s in SLO_CLASSES})
     loose.runtimes[0].stats = lanes[0].stats
     assert loose.lane_stats(wall=2.0)[0]["slo_attainment"] == 1.0
+
+
+# ------------------------------------------- goodput-aware routing mode
+
+def _skewed_stats(lanes):
+    """Lane 0 misses every TTFT target (goodput 0), lane 1 meets them
+    at a healthy token rate — the skewed fixture goodput mode should
+    react to and load-only mode cannot see."""
+    lanes[0].stats = {"completed": [_done_req(0, SLO_LATENCY, 5.0),
+                                    _done_req(1, SLO_LATENCY, 5.0)]}
+    lanes[1].stats = {"completed": [_done_req(2, SLO_LATENCY, 0.01,
+                                              tokens=8)]}
+
+
+def test_goodput_mode_beats_load_on_skewed_lanes():
+    """With identical live loads, load-only routing follows the SLO
+    preference order into the zero-goodput lane; goodput mode reads the
+    published signal and routes around it."""
+    load_r, load_lanes = mk_router((1, 4))
+    good_r, good_lanes = mk_router((1, 4), mode="goodput")
+    for router, lanes in ((load_r, load_lanes), (good_r, good_lanes)):
+        _skewed_stats(lanes)
+        router.lane_stats(wall=2.0)          # publish the signal
+    assert load_r.route(req(0, slo=SLO_LATENCY)) == 0   # blind to goodput
+    assert good_r.route(req(0, slo=SLO_LATENCY)) == 1   # routes around
+    # goodput reordering redefines the preference order itself, so the
+    # pick is first-choice — not a demotion/promotion spill
+    assert good_r.counters["demotions"] == 0
+    assert good_r.counters["promotions"] == 0
+
+
+def test_goodput_mode_degenerates_to_load_when_uniform():
+    """A uniform (or absent) goodput signal must leave the load-order
+    decision untouched — ties never reshuffle candidates."""
+    router, lanes = mk_router((1, 4), mode="goodput")
+    assert router.route(req(0, slo=SLO_LATENCY)) == 0   # no signal yet
+    for ln in lanes:                                    # identical signal
+        ln.stats = {"completed": [_done_req(ln.lane, SLO_LATENCY, 0.01,
+                                            tokens=4)]}
+    router.lane_stats(wall=2.0)
+    assert router.route(req(1, slo=SLO_LATENCY)) == 0
+    assert router.counters["demotions"] == 0
+
+
+def test_goodput_unscored_lane_explores_at_max():
+    """A lane with no published signal yet (added mid-run) scores at
+    the observed max: it is explored ahead of known-bad lanes, but a
+    known-good lane keeps its stable-sort precedence."""
+    router, _ = mk_router((1, 4, 8), mode="goodput")
+    router._goodput = {0: 0.5, 1: 4.0}      # lane 2 unscored
+    assert router._goodput_order([0, 1, 2]) == [1, 2, 0]
+
+
+def test_goodput_mode_validated():
+    with pytest.raises(ValueError, match="mode"):
+        mk_router((1, 4), mode="qps")
+
+
+# ------------------------------------- handoff targets (disaggregated)
+
+def mk_disagg_router(**kw):
+    """prefill@1 + two decode@1 + decode@2 (duck-typed roles)."""
+    lanes = [FakeLane(0, 1), FakeLane(1, 1), FakeLane(2, 1),
+             FakeLane(3, 2)]
+    lanes[0].role = "prefill"
+    for ln in lanes[1:]:
+        ln.role = "decode"
+    return LaneRouter(lanes, **kw), lanes
+
+
+def test_handoff_targets_filter_role_width_and_order_by_pressure():
+    router, lanes = mk_disagg_router()
+    lanes[1].active = 2                      # pressure 2/2 = 1.0
+    assert router.handoff_targets(1) == [2, 1]   # idle lane first
+    assert router.handoff_targets(2) == [3]      # width preserved
+    assert router.handoff_targets(8) == []       # no lane: park the row
+    # the prefill lane itself is never a target
+    assert 0 not in router.handoff_targets(1)
+
+
+def test_handoff_targets_respect_drain():
+    """A draining decode lane finishes its placed streams but accepts
+    no handoffs — drain semantics hold across the disaggregated path."""
+    router, lanes = mk_disagg_router()
+    router.draining.add(lanes[2].lane)
+    assert router.handoff_targets(1) == [1]
+    router.draining.add(lanes[1].lane)
+    assert router.handoff_targets(1) == []       # backpressure, no error
+
+
+def test_handoff_targets_goodput_order():
+    router, lanes = mk_disagg_router(mode="goodput")
+    router._goodput = {1: 0.5, 2: 4.0}
+    assert router.handoff_targets(1) == [2, 1]
+    router._goodput = {1: 4.0, 2: 0.5}
+    assert router.handoff_targets(1) == [1, 2]
+    # uniform signal: back to the pressure order
+    router._goodput = {1: 1.0, 2: 1.0}
+    lanes[1].active = 2
+    assert router.handoff_targets(1) == [2, 1]
+
+
+def test_decode_lanes_share_width_without_conflict():
+    """Width uniqueness applies to ROUTABLE lanes only: a disaggregated
+    pair shares one width by design, and admission never routes to the
+    decode lane."""
+    router, lanes = mk_disagg_router()
+    for u, slo in enumerate((SLO_LATENCY, SLO_BALANCED, SLO_THROUGHPUT)):
+        assert router.route(req(u, slo=slo)) == 0
+    # two PREFILL-capable lanes at one width is still a config error
+    both = [FakeLane(0, 1), FakeLane(1, 1)]
+    with pytest.raises(ValueError, match="duplicate"):
+        LaneRouter(both)
+    # ... and a decode-only fleet has nowhere to admit
+    for ln in both:
+        ln.role = "decode"
+    with pytest.raises(ValueError, match="routable"):
+        LaneRouter(both)

@@ -151,6 +151,54 @@ def test_plans_carry_lane_tag():
     assert fp.lane == 3
 
 
+def test_handoff_plan_validation_and_roundtrip():
+    """Disaggregated handoff at the scheduler layer (DESIGN.md
+    §disaggregated): a finished-prefill row is planned, retired from
+    the prefill lane and admitted whole into a free decode-lane row —
+    streams keep their uids/budgets and finish on the new lane."""
+    src = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64,
+                              lane=0)
+    dst = ContinuousScheduler(n_mux=2, backbone_batch=2, max_len=64,
+                              lane=1)
+    for i in range(2):
+        src.submit(mk_req(i, max_new=3))
+    src.plan_admissions()                     # both streams pack row 0
+    with pytest.raises(ValueError, match="mid-prefill"):
+        src.plan_handoff(0, 1, 0, 4)          # not handoff-ready yet
+    src.chunk_done(0, 4)
+    with pytest.raises(ValueError, match="no live streams"):
+        src.plan_handoff(1, 1, 0, 4)          # empty row
+    plan = src.plan_handoff(0, 1, 1, 4)
+    assert (plan.row, plan.dst_row, plan.lane, plan.dst_lane) \
+        == (0, 1, 0, 1)
+    assert plan.uids == (0, 1) and plan.tokens == 4
+    plan_taken = src.plan_handoff(0, 1, 0, 4)  # planning is pure
+
+    slots = src.retire_handoff(plan)
+    assert src.n_active == 0 and not src.row_active(0)
+    assert len(slots) == 2 and all(s.request is not None for s in slots)
+
+    dst.submit(mk_req(9))
+    dst.plan_admissions()                     # occupies dst row 0
+    with pytest.raises(ValueError, match="occupied"):
+        dst.admit_handoff(plan_taken, slots)
+    with pytest.raises(ValueError, match="width"):
+        dst.admit_handoff(plan, slots[:1])    # composition must survive
+    dst.admit_handoff(plan, slots)
+    assert dst.row_active(1)
+    assert all(s.request.lane == 1 for s in dst.slots[1])
+    # the migrated streams finish on the destination lane
+    for _ in range(3):
+        dst.record_row_tokens(1, [7, 7])
+    done = {r.uid for r in dst.completed}
+    assert done == {0, 1}
+    for r in dst.completed:
+        assert len(r.output) == 3 and r.lane == 1
+    # a handed-off row admits fresh work again on the source side
+    src.submit(mk_req(5))
+    assert src.plan_admissions()
+
+
 @pytest.mark.parametrize("hkv,window", [(2, None), (2, 24), (8, None)])
 def test_decode_attention_kernel(hkv, window):
     from repro.kernels import ops, ref

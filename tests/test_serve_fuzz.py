@@ -23,7 +23,16 @@ prompt length, generation budget, pool pressure) are served through:
                       kernels (``ServeConfig(kv_dtype='int8')``): same
                       churn schedules as the bf16-page arm, greedy
                       agreement >= 99% of generated tokens, compile
-                      counts unchanged (quantization adds no buckets).
+                      counts unchanged (quantization adds no buckets);
+  * disaggregated   — a prefill-only + decode-only lane pair
+                      (``LaneSpec(role=...)``): finished rows migrate
+                      their KV pages to the decode lane and resume from
+                      the already-sampled token — token-identical to
+                      the single-lane chunked arm with zero re-prefill
+                      on the decode lane and per-role compile counts
+                      (prefill lane: buckets only; decode lane: decode
+                      only), under plain, pool-budget, decode-lane
+                      shard-kill and goodput-routing schedules.
 
 All paged arms must emit token-identical greedy streams per request, and
 each stream must equal its solo ``greedy_generate`` output.  The ring
@@ -51,7 +60,7 @@ from repro.core import MuxSpec
 from repro.configs import get_config
 from repro.models import TransformerLM
 from repro.serve import ServeConfig, greedy_generate
-from repro.serve.router import SLO_CLASSES
+from repro.serve.router import LaneSpec, SLO_CLASSES
 from repro.serve.telemetry import Telemetry
 from repro.launch.mesh import make_serve_mesh
 from repro.launch.serve import run_continuous
@@ -314,6 +323,108 @@ def _fuzz_quantized_once(cfg, params, seed):
         f"int8 greedy agreement {agree}/{total} below 99%")
 
 
+def _run_disagg(cfg, params, arrivals, *, n_shards=1, pool_budget=None,
+                events=None, route="load"):
+    """Serve the schedule through a prefill-only + decode-only lane pair
+    at width 1 (DESIGN.md §disaggregated); returns (uid -> tokens,
+    stats) after asserting the disaggregation contract: the prefill
+    lane never decodes, the decode lane never prefills (migrated rows
+    resume from their already-sampled token — zero re-prefill), both
+    lanes keep per-width compile counts, and the pools drain clean."""
+    lanes = (LaneSpec(n_mux=1, rows=ROWS, chunk=4, role="prefill"),
+             LaneSpec(n_mux=1, rows=ROWS, chunk=4, role="decode"))
+    stats = run_continuous({1: params}, _paged_sc(cfg, n_shards=n_shards),
+                           ROWS, [(t, p.copy(), m) for t, p, m in arrivals],
+                           chunk=4, lanes=lanes, pool_budget=pool_budget,
+                           events=events, route=route)
+    out = {r.uid: (tuple(r.prompt), list(r.output))
+           for r in stats["completed"]}
+    assert len(out) == len(arrivals), "disagg arm dropped requests"
+    for pool in stats["pools"]:
+        assert pool.n_used_blocks == 0
+        pool.check_invariants()
+    pre, dec = stats["lanes"]
+    assert pre["role"] == "prefill" and dec["role"] == "decode"
+    # phase separation: the prefill lane never ran a decode step, the
+    # decode lane never prefilled — every migrated row resumed decoding
+    # from the token the prefill lane already sampled (zero re-prefill)
+    assert pre["decode_steps"] == 0, "prefill lane ran decode"
+    assert dec["prefill_events"] == 0, "decode lane re-prefilled"
+    assert dec["prefill_tokens"] == 0
+    # compile-once per role: prefill lane traces only prefill buckets,
+    # decode lane only its decode step, each exactly once
+    assert all(k.startswith("prefill_") for k in pre["trace_counts"]), (
+        f"prefill lane traced {pre['trace_counts']}")
+    served = bool(dec["completed"])
+    assert dict(dec["trace_counts"]) == ({"decode": 1} if served else {}), (
+        f"decode lane traced {dec['trace_counts']}")
+    assert all(v == 1 for v in pre["trace_counts"].values())
+    rec = stats["recovery"]
+    assert rec["handoffs"] == pre["handoffs_out"] == dec["handoffs_in"]
+    assert rec["migrated_kv_bytes"] == pre["migrated_bytes"]
+    if rec["handoffs"]:
+        assert rec["migrated_kv_bytes"] > 0
+    return out, stats
+
+
+def _fuzz_disagg_once(cfg, params, seed):
+    """Disaggregated arm: prefill→migrate→decode must be token-identical
+    to the single-lane chunked arm and to solo greedy, with every
+    stream needing >= 2 tokens handed off exactly once (max_new == 1
+    streams finish on the prefill lane and never migrate)."""
+    arrivals = _schedule(cfg, seed)
+    base = _run_arm(params, _paged_sc(cfg), arrivals, chunk=4)
+    got, stats = _run_disagg(cfg, params, arrivals)
+    assert got == base, "disagg arm diverged from single-lane chunked"
+    sc1 = _paged_sc(cfg)
+    for uid, (_, prompt, max_new) in enumerate(arrivals):
+        want = greedy_generate(params, sc1, jnp.asarray(prompt)[None],
+                               steps=max_new)[0]
+        np.testing.assert_array_equal(np.asarray(got[uid][1]),
+                                      np.asarray(want))
+    # width-1 lanes: one stream per row, so handoffs == streams that
+    # outlive their prefill-lane first token
+    need_decode = sum(1 for _, _, m in arrivals if m >= 2)
+    assert stats["recovery"]["handoff_streams"] == need_decode
+
+
+def _fuzz_disagg_pressure_once(cfg, params, seed):
+    """Disaggregated arm under a shared block budget: admission
+    rollbacks on the prefill lane and handoff deferrals (decode pool
+    momentarily full → the row parks and retries) must not change a
+    single token."""
+    arrivals = _schedule(cfg, seed, n_req=3)
+    base = _run_arm(params, _paged_sc(cfg), arrivals, chunk=4)
+    got, _ = _run_disagg(cfg, params, arrivals, pool_budget=20)
+    assert got == base, "budget-pressure disagg arm diverged"
+
+
+def _fuzz_disagg_kill_shard_once(cfg, params, seed):
+    """Disaggregated arm with a decode-lane shard kill: the dead
+    shard's rows bounce back through the router to the prefill lane,
+    replay from host token logs, and hand off again — token-identical
+    to the undisturbed run, with the decode lane still never running a
+    prefill itself (replay prefills happen on the prefill lane)."""
+    arrivals = _schedule(cfg, seed)
+    base = _run_arm(params, _paged_sc(cfg), arrivals, chunk=4)
+    got, stats = _run_disagg(cfg, params, arrivals, n_shards=2,
+                             events=[{"step": 4, "op": "kill_shard",
+                                      "shard": 1, "lane": 1}])
+    assert got == base, "kill-shard disagg arm diverged"
+    assert stats["pools"][1].dead_shards == {1}
+    assert stats["recovery"]["shards_killed"] == 1
+
+
+def _fuzz_disagg_goodput_once(cfg, params, seed):
+    """Goodput routing must be a pure candidate re-ordering: with one
+    prefill lane and one decode lane the routed sets are forced, so
+    the goodput-mode run is token-identical to load-mode."""
+    arrivals = _schedule(cfg, seed)
+    load, _ = _run_disagg(cfg, params, arrivals, route="load")
+    goodput, _ = _run_disagg(cfg, params, arrivals, route="goodput")
+    assert goodput == load, "goodput routing changed the token streams"
+
+
 LANE_WIDTHS = (1, 4, 8)
 
 
@@ -465,6 +576,28 @@ def test_fuzz_quantized_kv_deterministic(model, seed):
     _fuzz_quantized_once(cfg, params, seed)
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_disagg_deterministic(model, seed):
+    cfg, params = model
+    _fuzz_disagg_once(cfg, params, seed)
+
+
+def test_fuzz_disagg_pressure_deterministic(model):
+    cfg, params = model
+    _fuzz_disagg_pressure_once(cfg, params, 3)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_fuzz_disagg_kill_shard_deterministic(model, seed):
+    cfg, params = model
+    _fuzz_disagg_kill_shard_once(cfg, params, seed)
+
+
+def test_fuzz_disagg_goodput_deterministic(model):
+    cfg, params = model
+    _fuzz_disagg_goodput_once(cfg, params, 0)
+
+
 # ------------------------------------------------- hypothesis variants
 
 @settings(max_examples=5, deadline=None)
@@ -486,3 +619,10 @@ def test_fuzz_pool_pressure_property(model, seed):
 def test_fuzz_quantized_kv_property(model, seed):
     cfg, params = model
     _fuzz_quantized_once(cfg, params, seed)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fuzz_disagg_property(model, seed):
+    cfg, params = model
+    _fuzz_disagg_once(cfg, params, seed)
